@@ -1,0 +1,41 @@
+"""Beyond-paper benchmark: fit the generic performance model to the
+40-cell dry-run roofline table and demonstrate the launcher hooks
+(mesh ranking, straggler thresholds, chips-scaling power)."""
+from __future__ import annotations
+
+import os
+
+from benchmarks.common import DRYRUN_DIR, emit
+
+
+def roofline_fit(results_dir: str = DRYRUN_DIR) -> dict:
+    if not os.path.isdir(results_dir) or not any(
+            f.endswith(".json") for f in os.listdir(results_dir)):
+        emit("roofline_fit", status="SKIP",
+             reason="no dryrun results (run python -m repro.launch.dryrun --all)")
+        return {"status": "SKIP"}
+    from repro.configs import get_config, get_shape
+    from repro.core.predictor import StepTimePredictor
+
+    try:
+        pred = StepTimePredictor.fit_from_dryrun(results_dir, seeds=(0, 1, 2))
+    except ValueError as e:
+        emit("roofline_fit", status="SKIP", reason=str(e))
+        return {"status": "SKIP"}
+    fr = pred.fit_result
+    emit("roofline_fit", status="OK",
+         train_mape=f"{fr.train_metrics['mape']:.3f}",
+         r2=f"{fr.train_metrics['r2']:.3f}",
+         q_chips=f"{pred.scaling_power_chips():+.3f}")
+
+    # launcher hook demos
+    cfg, shape = get_config("qwen2.5-3b"), get_shape("train_4k")
+    ranked = pred.rank_meshes(cfg, shape, [64, 128, 256, 512])
+    emit("mesh_ranking", arch="qwen2.5-3b", shape="train_4k",
+         best=f"{ranked[0][0]}chips",
+         order="|".join(str(n) for n, _ in ranked))
+    thr = pred.straggler_threshold(cfg, shape, 256)
+    emit("straggler_threshold", arch="qwen2.5-3b", chips=256,
+         threshold_s=f"{thr:.3f}")
+    return {"status": "OK", "q_chips": pred.scaling_power_chips(),
+            "ranked": ranked, "metrics": fr.train_metrics}

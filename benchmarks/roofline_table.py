@@ -1,0 +1,88 @@
+"""Aggregate dry-run JSONs into the §Roofline markdown table + pick the
+hillclimb cells.
+
+  PYTHONPATH=src python -m benchmarks.roofline_table [--mesh pod]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from benchmarks.common import DRYRUN_DIR
+
+NOTE = {
+    ("compute", "train"): "raise arithmetic intensity: fuse attn (Pallas), "
+                          "drop remat recompute",
+    ("memory", "train"): "cut activation traffic: bigger attn blocks, "
+                         "bf16 score path, remat policy",
+    ("collective", "train"): "resharded CE / param-gather schedule; "
+                             "overlap collectives with compute",
+    ("memory", "prefill"): "KV write coalescing; wider attention blocks",
+    ("collective", "prefill"): "keep logits sharded (onehot CE), avoid "
+                               "vocab all-gather",
+    ("memory", "decode"): "decode is cache-bandwidth-bound by nature; "
+                          "shrink cache reads (MLA/window/ring)",
+    ("collective", "decode"): "batch decode collectives; latent (MLA) "
+                              "cache reduces gather volume",
+}
+
+
+def load_rows(mesh: str):
+    rows = []
+    for name in sorted(os.listdir(DRYRUN_DIR)):
+        if not name.endswith(".json") or name == "summary.json":
+            continue
+        r = json.load(open(os.path.join(DRYRUN_DIR, name)))
+        if r.get("mesh") != mesh:
+            continue
+        rows.append(r)
+    return rows
+
+
+def table(mesh: str = "pod") -> str:
+    from repro.configs import get_shape
+    rows = load_rows(mesh)
+    lines = [
+        "| arch | shape | compute_s | memory_s | collective_s | bottleneck "
+        "| t_step | MODEL_FLOPs/HLO | useful | note |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    picks = {"worst_useful": (None, 1e9), "most_collective": (None, -1.0)}
+    for r in rows:
+        cell = f"{r['arch']} | {r['shape']}"
+        if r.get("status") == "SKIP":
+            lines.append(f"| {cell} | — | — | — | SKIP | — | — | — | "
+                         f"{r['reason'][:60]}… |")
+            continue
+        if r.get("status") != "OK":
+            lines.append(f"| {cell} | — | — | — | FAIL | — | — | — | |")
+            continue
+        rf = r["roofline"]
+        mode = get_shape(r["shape"]).mode
+        ratio = (rf["model_flops"] / rf["n_chips"]) / max(rf["flops"], 1)
+        note = NOTE.get((rf["bottleneck"], mode), "")
+        lines.append(
+            f"| {cell} | {rf['compute_s']:.4f} | {rf['memory_s']:.4f} | "
+            f"{rf['collective_s']:.4f} | {rf['bottleneck']} | "
+            f"{rf['t_step']:.4f} | {ratio:.3f} | "
+            f"{rf['useful_fraction']:.2%} | {note} |")
+        key = (r["arch"], r["shape"])
+        if rf["useful_fraction"] < picks["worst_useful"][1] \
+                and mode == "train":
+            picks["worst_useful"] = (key, rf["useful_fraction"])
+        coll_frac = rf["collective_s"] / max(rf["t_step"], 1e-12)
+        if coll_frac > picks["most_collective"][1]:
+            picks["most_collective"] = (key, coll_frac)
+    out = "\n".join(lines)
+    out += ("\n\nhillclimb picks: worst-useful(train) = "
+            f"{picks['worst_useful']}, most-collective = "
+            f"{picks['most_collective']}")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod")
+    args = ap.parse_args()
+    print(table(args.mesh))

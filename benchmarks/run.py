@@ -1,0 +1,74 @@
+"""Benchmark harness — one entry per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only table5,...]
+
+Outputs CSV-ish lines ``name,key=value,...`` plus formatted tables, and
+writes a JSON artifact per run under benchmarks/artifacts/.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer seeds/generations (CI-scale)")
+    ap.add_argument("--only", default="",
+                    help="comma list: table2..table6,fig7,fig8,roofline")
+    args = ap.parse_args()
+
+    from benchmarks import tables
+    from benchmarks.common import ART, emit
+    from benchmarks.roofline_fit import roofline_fit
+
+    seeds = 3 if args.quick else 10
+    small = 2 if args.quick else 3
+    maxiter = 150 if args.quick else 300
+
+    jobs = {
+        "table2": lambda: tables.table2_fit(seeds, maxiter),
+        "table3": lambda: tables.table3_fit_l2(seeds, maxiter),
+        "table4": lambda: tables.table4_reg_compare(
+            max(seeds // 2, 2), maxiter),
+        "table5": lambda: tables.table5_model_compare(seeds, maxiter),
+        "table6": lambda: tables.table6_scaling(seeds, maxiter),
+        "fig7": lambda: tables.fig7_lambda_sweep("jit", small, maxiter),
+        "fig8": lambda: tables.fig8_coeff_paths("jit", small, maxiter),
+        "roofline": roofline_fit,
+    }
+    only = [s for s in args.only.split(",") if s]
+    results = {}
+    for name, job in jobs.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            results[name] = job()
+            emit(f"{name}_done", seconds=f"{time.time()-t0:.1f}")
+        except Exception as e:  # keep the harness running
+            import traceback
+            traceback.print_exc()
+            emit(f"{name}_FAILED", error=str(e)[:200])
+            results[name] = {"error": str(e)}
+
+    os.makedirs(ART, exist_ok=True)
+    out_path = os.path.join(ART, "bench_results.json")
+
+    def default(o):
+        import numpy as np
+        if isinstance(o, (np.floating, np.integer)):
+            return float(o)
+        if isinstance(o, np.ndarray):
+            return o.tolist()
+        return str(o)
+
+    json.dump(results, open(out_path, "w"), indent=1, default=default)
+    print(f"[benchmarks] wrote {out_path}")
+
+
+if __name__ == "__main__":
+    main()

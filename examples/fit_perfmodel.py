@@ -1,0 +1,54 @@
+"""End-to-end paper pipeline on *measured* data: sweep LeNet-5 iteration
+times over the Table-1 hyperparameter space (on this machine), fit the
+generic model with and without regularization, compare against the
+black-box baselines, and print the paper-style tables.
+
+  PYTHONPATH=src python examples/fit_perfmodel.py [--trials 90]
+"""
+import argparse
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trials", type=int, default=90)
+    ap.add_argument("--mode", default="jit")
+    args = ap.parse_args()
+
+    from repro.core.baselines import (RandomForestRegressor, SVR,
+                                      encode_blackbox)
+    from repro.core.fit import fit_model
+    from repro.core.generic_model import metrics
+    from repro.core.interpret import format_table, scaling_report
+    from repro.perf.features import LENET_SPEC
+    from repro.perf.sweep import run_sweep, split_rows
+
+    print(f"measuring {args.trials} LeNet-5 iteration times "
+          f"(mode={args.mode})...")
+    rows = run_sweep(n_trials=args.trials, modes=(args.mode,),
+                     verbose_every=25)
+    f_s, t_s, f_t, t_t = split_rows(rows, args.mode)
+    print(f"fit {len(f_s)} / test {len(f_t)} samples")
+
+    r = fit_model(LENET_SPEC, f_s, t_s, test_samples=f_t, test_times=t_t,
+                  reg="l2", lam=1e-3, seeds=range(5), maxiter=300)
+    print(r.summary())
+    print(format_table(r.model, "LeNet-5 generic model (L2)"))
+    print(scaling_report(r.model))
+
+    X, Xt = encode_blackbox(LENET_SPEC, f_s), encode_blackbox(LENET_SPEC,
+                                                              f_t)
+    rf = RandomForestRegressor(n_trees=50).fit(X, np.asarray(t_s))
+    svr = SVR(iters=800).fit(X, np.asarray(t_s))
+    print("\n== black-box comparison (test MAPE) ==")
+    print(f"  generic model : {r.test_metrics['mape']:.1%}")
+    print(f"  random forest : "
+          f"{metrics(np.asarray(t_t), rf.predict(Xt))['mape']:.1%}"
+          "   (no interpretability)")
+    print(f"  ε-SVR         : "
+          f"{metrics(np.asarray(t_t), svr.predict(Xt))['mape']:.1%}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""The paper's model as a *launcher feature*: fit on dry-run roofline
+cells, predict step time for unseen mesh sizes, rank candidate meshes, and
+derive a straggler threshold.
+
+Requires dry-run results (python -m repro.launch.dryrun --all); falls back
+to a synthetic demonstration otherwise.
+
+  PYTHONPATH=src python examples/predict_scaling.py
+"""
+import os
+
+from benchmarks.common import DRYRUN_DIR
+
+
+def main():
+    from repro.configs import get_config, get_shape
+    from repro.core.predictor import StepTimePredictor
+
+    if os.path.isdir(DRYRUN_DIR) and any(
+            f.endswith(".json") and f != "summary.json"
+            for f in os.listdir(DRYRUN_DIR)):
+        pred = StepTimePredictor.fit_from_dryrun(DRYRUN_DIR,
+                                                 seeds=(0, 1, 2))
+        print(pred.fit_result.summary())
+        print(f"fitted chips-scaling power: "
+              f"q = {pred.scaling_power_chips():+.3f}  (-1 would be ideal)")
+        for arch in ("qwen2.5-3b", "deepseek-v3-671b", "mamba2-370m"):
+            cfg, shape = get_config(arch), get_shape("train_4k")
+            t256 = pred.predict_step_seconds(cfg, shape, 256)
+            t512 = pred.predict_step_seconds(cfg, shape, 512)
+            print(f"{arch:22s} train_4k: 256 chips {t256:7.3f}s -> "
+                  f"512 chips {t512:7.3f}s  "
+                  f"(speedup x{t256 / max(t512, 1e-9):.2f})")
+            print(f"{'':22s} straggler threshold (tol 1.5): "
+                  f"{pred.straggler_threshold(cfg, shape, 256):.3f}s")
+    else:
+        print("no dry-run results found — run:\n"
+              "  PYTHONPATH=src python -m repro.launch.dryrun --all\n"
+              "then re-run this example.")
+
+
+if __name__ == "__main__":
+    main()

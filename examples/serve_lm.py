@@ -1,0 +1,10 @@
+"""Serving example: batched prefill + greedy decode with ring KV caches
+(local-attention layers keep window-sized ring buffers — gemma2 config).
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    serve_main(["--arch", "gemma2-2b", "--reduced", "--batch", "4",
+                "--prompt-len", "32", "--gen", "32"])

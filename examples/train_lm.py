@@ -1,0 +1,25 @@
+"""End-to-end driver example: train a ~small LM for a few hundred steps
+with checkpointing, straggler monitoring, and resume — the production
+training path at CPU scale.
+
+  PYTHONPATH=src python examples/train_lm.py [--steps 200]
+"""
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--arch", default="smollm-360m")
+    args = ap.parse_args()
+    train_main(["--arch", args.arch, "--reduced",
+                "--steps", str(args.steps), "--batch", "8", "--seq", "128",
+                "--ckpt-dir", "/tmp/repro_example_ckpt",
+                "--ckpt-every", "50", "--log-every", "20"])
+
+
+if __name__ == "__main__":
+    main()

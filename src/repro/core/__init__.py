@@ -1,0 +1,23 @@
+"""The paper's contribution: a generic performance model for distributed DL.
+
+  t(I, E, x) = ( Σ_i a_i I_i^{p_i} ) · ( Π_j E_j^{q_j} ) + C        (eq. 4)
+
+fitted to measured iteration times by differential evolution (eq. 8) with
+optional L1/L2 regularization (eqs. 10–11).
+
+Submodules:
+  generic_model — feature spec, encoding, the expression (jit-able)
+  de            — JAX-vectorized differential evolution (+ Adam polish)
+  fit           — fitting pipeline: multi-seed, jax or scipy backend
+  baselines     — black-box comparators (Random Forest, ε-SVR), numpy
+  interpret     — paper-style tables (2/3/6) and scaling analysis
+  predictor     — step-time prediction for (arch × shape × mesh) cells;
+                  runtime hooks for straggler detection / mesh selection
+"""
+from repro.core.generic_model import (FeatureSpec, PerfModel, encode_dataset,
+                                      predict_times)
+from repro.core.fit import FitResult, fit_model
+from repro.core.de import differential_evolution_jax
+
+__all__ = ["FeatureSpec", "PerfModel", "encode_dataset", "predict_times",
+           "FitResult", "fit_model", "differential_evolution_jax"]

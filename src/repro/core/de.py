@@ -1,0 +1,121 @@
+"""Differential evolution, JAX-native and fully vectorized.
+
+The paper uses scipy's DE (best1bin, popsize 15·M, dithered F, CR 0.7).
+This implementation reproduces that algorithm but evaluates the whole
+population in one ``vmap`` and runs generations under ``lax.scan`` — on a
+1500-sample dataset a 10-seed fit drops from minutes (scipy, per-candidate
+python callbacks) to seconds. An optional projected-Adam polish replaces
+scipy's L-BFGS-B polish (the MAE cost is piecewise-smooth; subgradients
+are fine).
+
+``scipy`` remains available as the paper-faithful backend in
+``repro.core.fit`` — tests assert both backends reach equivalent costs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class DEResult(NamedTuple):
+    x: jnp.ndarray            # best member [M]
+    fun: jnp.ndarray          # best cost
+    population: jnp.ndarray   # final population [NP, M]
+    energies: jnp.ndarray     # final costs [NP]
+    n_gens: int
+
+
+@partial(jax.jit, static_argnames=("cost_vmapped", "maxiter", "popsize",
+                                   "recombination", "polish_steps"))
+def _de_run(cost_vmapped, lo, hi, key, maxiter: int, popsize: int,
+            recombination: float, polish_steps: int) -> DEResult:
+    M = lo.shape[0]
+    NP = popsize * M
+    k_init, k_gen = jax.random.split(key)
+    pop = lo + (hi - lo) * jax.random.uniform(k_init, (NP, M))
+    energies = cost_vmapped(pop)
+
+    def generation(carry, k):
+        pop, energies = carry
+        kF, k1, k2, k3, kcr = jax.random.split(k, 5)
+        F = jax.random.uniform(kF, (), minval=0.5, maxval=1.0)  # dither
+        best = pop[jnp.argmin(energies)]
+        idx = jnp.arange(NP)
+        r1 = jax.random.randint(k1, (NP,), 0, NP - 1)
+        r1 = jnp.where(r1 >= idx, r1 + 1, r1)
+        r2 = jax.random.randint(k2, (NP,), 0, NP - 1)
+        r2 = jnp.where(r2 >= idx, r2 + 1, r2)
+        mutant = best[None, :] + F * (pop[r1] - pop[r2])       # best1
+        cross = jax.random.uniform(kcr, (NP, M)) < recombination
+        jrand = jax.random.randint(k3, (NP,), 0, M)
+        cross = cross | (jnp.arange(M)[None, :] == jrand[:, None])
+        trial = jnp.where(cross, mutant, pop)
+        trial = jnp.clip(trial, lo, hi)
+        e_trial = cost_vmapped(trial)
+        accept = e_trial <= energies
+        pop = jnp.where(accept[:, None], trial, pop)
+        energies = jnp.where(accept, e_trial, energies)
+        return (pop, energies), e_trial.min()
+
+    (pop, energies), _ = jax.lax.scan(
+        generation, (pop, energies), jax.random.split(k_gen, maxiter))
+
+    best_i = jnp.argmin(energies)
+    x, fun = pop[best_i], energies[best_i]
+
+    if polish_steps:
+        cost_single = lambda z: cost_vmapped(z[None, :])[0]
+        g = jax.grad(cost_single)
+
+        def polish(carry, _):
+            z, m, v, t = carry
+            gt = g(z)
+            t = t + 1
+            m = 0.9 * m + 0.1 * gt
+            v = 0.999 * v + 0.001 * gt * gt
+            mh = m / (1 - 0.9 ** t)
+            vh = v / (1 - 0.999 ** t)
+            z = jnp.clip(z - 1e-3 * mh / (jnp.sqrt(vh) + 1e-9), lo, hi)
+            return (z, m, v, t), None
+
+        (xp, _, _, _), _ = jax.lax.scan(
+            polish, (x, jnp.zeros_like(x), jnp.zeros_like(x), 0.0),
+            None, length=polish_steps)
+        fp = cost_single(xp)
+        better = fp < fun
+        x = jnp.where(better, xp, x)
+        fun = jnp.where(better, fp, fun)
+
+    return DEResult(x, fun, pop, energies, maxiter)
+
+
+def differential_evolution_jax(cost_fn: Callable, bounds: Tuple[np.ndarray,
+                                                                np.ndarray],
+                               *, seed: int = 0, maxiter: int = 300,
+                               popsize: int = 15, recombination: float = 0.7,
+                               polish_steps: int = 500) -> DEResult:
+    """cost_fn maps a single x [M] -> scalar cost; vmapped internally."""
+    lo = jnp.asarray(bounds[0], jnp.float32)
+    hi = jnp.asarray(bounds[1], jnp.float32)
+    cost_v = jax.vmap(cost_fn)
+    return _de_run(cost_v, lo, hi, jax.random.PRNGKey(seed), maxiter,
+                   popsize, recombination, polish_steps)
+
+
+def de_multi_seed(cost_fn: Callable, bounds, seeds, *, maxiter: int = 300,
+                  popsize: int = 15, recombination: float = 0.7,
+                  polish_steps: int = 500):
+    """Run DE once per seed reusing one compiled program (same statics)."""
+    lo = jnp.asarray(bounds[0], jnp.float32)
+    hi = jnp.asarray(bounds[1], jnp.float32)
+    cost_v = jax.vmap(cost_fn)
+    out = []
+    for s in seeds:
+        out.append(_de_run(cost_v, lo, hi, jax.random.PRNGKey(s), maxiter,
+                           popsize, recombination, polish_steps))
+    return out

@@ -1,0 +1,108 @@
+"""Fitting pipeline: encode → DE (jax or scipy backend) → PerfModel.
+
+Backends:
+  "jax"   — repro.core.de (vectorized best1bin + Adam polish). Fast path.
+  "scipy" — scipy.optimize.differential_evolution with default hyper-
+            parameters, as in the paper ("we use the DE implementation
+            from the scipy python package, with default values").
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.de import de_multi_seed
+from repro.core.generic_model import (FeatureSpec, PerfModel, cost_fn,
+                                      encode_dataset, metrics, predict_times)
+
+
+@dataclass
+class FitResult:
+    model: PerfModel
+    train_metrics: Dict[str, float]
+    test_metrics: Dict[str, float]
+    seed_costs: List[float]
+    fit_seconds: float
+    backend: str
+
+    def summary(self) -> str:
+        tm = self.test_metrics
+        return (f"[{self.backend}] test MAPE {tm['mape']:.1%} "
+                f"RMSE {tm['rmse']:.3g} R2 {tm['r2']:.3f} "
+                f"({self.fit_seconds:.1f}s, {len(self.seed_costs)} seeds)")
+
+
+def fit_model(spec: FeatureSpec, samples: Sequence[Dict],
+              times: Sequence[float], *,
+              test_samples: Optional[Sequence[Dict]] = None,
+              test_times: Optional[Sequence[float]] = None,
+              reg: str = "none", lam: float = 0.0,
+              seeds: Sequence[int] = tuple(range(10)),
+              backend: str = "jax", maxiter: int = 300,
+              popsize: int = 15) -> FitResult:
+    Xnum, Xcat, Xext, t = encode_dataset(spec, samples, times)
+    bounds = spec.bounds()
+    t0 = time.time()
+
+    if backend == "jax":
+        f = partial(cost_fn, spec, Xnum=Xnum, Xcat=Xcat, Xext=Xext, t=t,
+                    reg=reg, lam=lam)
+        results = de_multi_seed(lambda x: f(x), bounds, seeds,
+                                maxiter=maxiter, popsize=popsize)
+        xs = np.stack([np.asarray(r.x) for r in results])
+        costs = [float(r.fun) for r in results]
+    elif backend == "scipy":
+        from scipy.optimize import differential_evolution
+        Xn, Xc, Xe, tt = (np.asarray(Xnum), np.asarray(Xcat),
+                          np.asarray(Xext), np.asarray(t))
+        jf = jax.jit(lambda x: cost_fn(spec, x, jnp.asarray(Xn),
+                                       jnp.asarray(Xc), jnp.asarray(Xe),
+                                       jnp.asarray(tt), reg=reg, lam=lam))
+
+        def npf(x):
+            return float(jf(jnp.asarray(x, jnp.float32)))
+
+        xs, costs = [], []
+        for s in seeds:
+            r = differential_evolution(
+                npf, list(zip(bounds[0], bounds[1])), seed=int(s),
+                maxiter=maxiter)
+            xs.append(r.x)
+            costs.append(float(r.fun))
+        xs = np.stack(xs)
+    else:
+        raise ValueError(backend)
+
+    fit_s = time.time() - t0
+    best = int(np.argmin(costs))
+    model = PerfModel(spec, xs[best], x_seeds=xs, reg=reg, lam=lam)
+
+    train_m = metrics(np.asarray(t), model.predict_encoded(Xnum, Xcat, Xext))
+    if test_samples is not None:
+        Xn2, Xc2, Xe2, t2 = encode_dataset(spec, test_samples, test_times)
+        test_m = metrics(np.asarray(t2),
+                         model.predict_encoded(Xn2, Xc2, Xe2))
+    else:
+        test_m = dict(train_m)
+    return FitResult(model, train_m, test_m, costs, fit_s, backend)
+
+
+def lambda_sweep(spec: FeatureSpec, samples, times, test_samples, test_times,
+                 *, reg: str, lams: Sequence[float],
+                 seeds=tuple(range(3)), maxiter=200) -> List[Tuple[float,
+                                                                   Dict]]:
+    """R² / MAPE vs λ (paper Fig. 7) + coefficient paths (Fig. 8)."""
+    rows = []
+    for lam in lams:
+        r = fit_model(spec, samples, times, test_samples=test_samples,
+                      test_times=test_times, reg=reg, lam=lam, seeds=seeds,
+                      maxiter=maxiter)
+        rows.append((lam, {"test": r.test_metrics, "train": r.train_metrics,
+                           "x": r.model.x.tolist()}))
+    return rows

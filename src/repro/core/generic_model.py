@@ -1,0 +1,196 @@
+"""The generic performance-model expression (paper eqs. 1–4) in JAX.
+
+Feature handling follows the paper exactly:
+
+* numeric intrinsics enter as power terms ``a_i · I_i^{p_i}``;
+* categorical intrinsics (activation, optimizer, dataset, padding) enter
+  as per-value constants — one ``a`` per category, no power (Table 2
+  lists e.g. "Sigmoid/Relu/Tanh" rows with a but p = "-");
+* extrinsics enter multiplicatively as ``E_j^{q_j}``;
+* plus the additive constant C.
+
+Unknown vector layout (M = 2·n_num + Σ|cats| + n_ext + 1):
+  x = [a_num(n) | p_num(n) | a_cat(Σ|c|) | q(n_ext) | C]
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class FeatureSpec:
+    numeric: Tuple[str, ...]                       # numeric intrinsic names
+    categorical: Tuple[Tuple[str, Tuple[str, ...]], ...]  # (name, values)
+    extrinsic: Tuple[str, ...]                     # extrinsic names
+
+    @property
+    def n_num(self) -> int:
+        return len(self.numeric)
+
+    @property
+    def n_cat_total(self) -> int:
+        return sum(len(v) for _, v in self.categorical)
+
+    @property
+    def n_ext(self) -> int:
+        return len(self.extrinsic)
+
+    @property
+    def n_params(self) -> int:
+        return 2 * self.n_num + self.n_cat_total + self.n_ext + 1
+
+    # -- x-vector slicing ----------------------------------------------------
+    def split(self, x):
+        n, c, e = self.n_num, self.n_cat_total, self.n_ext
+        a = x[..., :n]
+        p = x[..., n:2 * n]
+        acat = x[..., 2 * n:2 * n + c]
+        q = x[..., 2 * n + c:2 * n + c + e]
+        C = x[..., -1]
+        return a, p, acat, q, C
+
+    def param_names(self) -> List[str]:
+        names = [f"a:{f}" for f in self.numeric]
+        names += [f"p:{f}" for f in self.numeric]
+        for cname, vals in self.categorical:
+            names += [f"a:{cname}={v}" for v in vals]
+        names += [f"q:{f}" for f in self.extrinsic]
+        names.append("C")
+        return names
+
+    def bounds(self, a_hi: float = 1000.0, p_hi: float = 5.0
+               ) -> Tuple[np.ndarray, np.ndarray]:
+        """Paper's bounds: a,C ∈ (0, 1000); p,q ∈ (−5, 5)."""
+        lo = np.concatenate([
+            np.zeros(self.n_num),                  # a
+            -p_hi * np.ones(self.n_num),           # p
+            np.zeros(self.n_cat_total),            # a_cat
+            -p_hi * np.ones(self.n_ext),           # q
+            np.zeros(1),                           # C
+        ])
+        hi = np.concatenate([
+            a_hi * np.ones(self.n_num),
+            p_hi * np.ones(self.n_num),
+            a_hi * np.ones(self.n_cat_total),
+            p_hi * np.ones(self.n_ext),
+            a_hi * np.ones(1),
+        ])
+        return lo, hi
+
+
+def encode_dataset(spec: FeatureSpec, samples: Sequence[Dict],
+                   times: Optional[Sequence[float]] = None):
+    """samples: dicts with raw feature values. Returns (Xnum, Xcat, Xext[, t])
+    as jnp arrays. Numeric/extrinsic features must be positive."""
+    N = len(samples)
+    Xnum = np.zeros((N, spec.n_num))
+    Xcat = np.zeros((N, spec.n_cat_total))
+    Xext = np.zeros((N, spec.n_ext))
+    for k, s in enumerate(samples):
+        for i, f in enumerate(spec.numeric):
+            Xnum[k, i] = float(s[f])
+        off = 0
+        for cname, vals in spec.categorical:
+            v = s[cname]
+            Xcat[k, off + list(vals).index(v)] = 1.0
+            off += len(vals)
+        for j, f in enumerate(spec.extrinsic):
+            Xext[k, j] = float(s[f])
+    assert (Xnum > 0).all(), "numeric intrinsics must be positive"
+    assert (Xext > 0).all(), "extrinsics must be positive"
+    out = (jnp.asarray(Xnum), jnp.asarray(Xcat), jnp.asarray(Xext))
+    if times is not None:
+        return out + (jnp.asarray(np.asarray(times, np.float64)),)
+    return out
+
+
+def predict_times(spec: FeatureSpec, x, Xnum, Xcat, Xext):
+    """Vectorized eq. 4. x: [M] (or batched [..., M]); returns t̂ [N]."""
+    a, p, acat, q, C = spec.split(x)
+    # powers via exp/log for stability (features are validated positive)
+    t_I = jnp.sum(a[..., None, :] *
+                  jnp.exp(p[..., None, :] * jnp.log(Xnum)[None, :, :]
+                          if x.ndim > 1 else p[None, :] * jnp.log(Xnum)),
+                  axis=-1)
+    t_I = t_I + (Xcat @ acat[..., :, None])[..., 0] if x.ndim > 1 \
+        else t_I + Xcat @ acat
+    f_E = jnp.exp(jnp.sum(q[..., None, :] * jnp.log(Xext)[None, :, :]
+                          if x.ndim > 1 else q[None, :] * jnp.log(Xext),
+                          axis=-1))
+    return t_I * f_E + C[..., None] if x.ndim > 1 else t_I * f_E + C
+
+
+def cost_fn(spec: FeatureSpec, x, Xnum, Xcat, Xext, t, *,
+            reg: str = "none", lam: float = 0.0):
+    """Eq. 8 (MAE), optionally + λ·L1 (eq. 10) or λ·L2 (eq. 11).
+
+    The penalty covers all parameters except the intercept C (paper §III.C).
+    """
+    pred = predict_times(spec, x, Xnum, Xcat, Xext)
+    mae = jnp.mean(jnp.abs(t - pred), axis=-1)
+    if reg == "l1":
+        pen = jnp.sum(jnp.abs(x[..., :-1]), axis=-1)
+    elif reg == "l2":
+        pen = jnp.sum(jnp.square(x[..., :-1]), axis=-1)
+    else:
+        pen = 0.0
+    return mae + lam * pen
+
+
+@dataclass
+class PerfModel:
+    """A fitted generic performance model."""
+    spec: FeatureSpec
+    x: np.ndarray                      # best-fit constants [M]
+    x_seeds: Optional[np.ndarray] = None   # [n_seeds, M] per-seed fits
+    reg: str = "none"
+    lam: float = 0.0
+
+    def predict(self, samples: Sequence[Dict]) -> np.ndarray:
+        Xnum, Xcat, Xext = encode_dataset(self.spec, samples)
+        return np.asarray(predict_times(self.spec, jnp.asarray(self.x),
+                                        Xnum, Xcat, Xext))
+
+    def predict_encoded(self, Xnum, Xcat, Xext) -> np.ndarray:
+        return np.asarray(predict_times(self.spec, jnp.asarray(self.x),
+                                        Xnum, Xcat, Xext))
+
+    def scaling_powers(self) -> Dict[str, Tuple[float, float]]:
+        """Extrinsic q (mean, std over seeds) — paper Table 6."""
+        _, _, _, q, _ = self.spec.split(self.x)
+        if self.x_seeds is not None:
+            qs = np.stack([np.asarray(self.spec.split(xs)[3])
+                           for xs in self.x_seeds])
+            return {f: (float(np.mean(qs[:, j])), float(np.std(qs[:, j])))
+                    for j, f in enumerate(self.spec.extrinsic)}
+        return {f: (float(q[j]), 0.0)
+                for j, f in enumerate(self.spec.extrinsic)}
+
+    def param_table(self) -> List[Tuple[str, float, float]]:
+        """(name, mean, std) rows for every constant — paper Tables 2/3."""
+        names = self.spec.param_names()
+        if self.x_seeds is not None:
+            mean = np.mean(self.x_seeds, axis=0)
+            std = np.std(self.x_seeds, axis=0)
+        else:
+            mean, std = np.asarray(self.x), np.zeros_like(self.x)
+        return [(n, float(m), float(s))
+                for n, m, s in zip(names, mean, std)]
+
+
+def metrics(t_true: np.ndarray, t_pred: np.ndarray) -> Dict[str, float]:
+    t_true = np.asarray(t_true, np.float64)
+    t_pred = np.asarray(t_pred, np.float64)
+    err = t_true - t_pred
+    mape = float(np.mean(np.abs(err) / np.maximum(np.abs(t_true), 1e-12)))
+    mse = float(np.mean(err ** 2))
+    ss_res = float(np.sum(err ** 2))
+    ss_tot = float(np.sum((t_true - t_true.mean()) ** 2))
+    return {"mape": mape, "mse": mse, "rmse": float(np.sqrt(mse)),
+            "mae": float(np.mean(np.abs(err))),
+            "r2": 1.0 - ss_res / max(ss_tot, 1e-12)}

@@ -1,0 +1,61 @@
+"""Interpretability reports — the paper's Tables 2/3/6 as text/CSV."""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.generic_model import PerfModel
+
+
+def table_rows(model: PerfModel) -> List[Dict]:
+    """Rows with (kind, feature, a mean/std, p mean/std) — Tables 2/3."""
+    spec = model.spec
+    xs = model.x_seeds if model.x_seeds is not None else model.x[None]
+    mean, std = xs.mean(0), xs.std(0)
+    n = spec.n_num
+    rows = []
+    for i, f in enumerate(spec.numeric):
+        rows.append({"kind": "intrinsic", "feature": f,
+                     "a": (mean[i], std[i]),
+                     "p": (mean[n + i], std[n + i])})
+    off = 2 * n
+    for cname, vals in spec.categorical:
+        for v in vals:
+            rows.append({"kind": "categorical", "feature": f"{cname}={v}",
+                         "a": (mean[off], std[off]), "p": None})
+            off += 1
+    for j, f in enumerate(spec.extrinsic):
+        rows.append({"kind": "extrinsic", "feature": f,
+                     "q": (mean[off + j], std[off + j])})
+    rows.append({"kind": "constant", "feature": "C",
+                 "a": (mean[-1], std[-1])})
+    return rows
+
+
+def format_table(model: PerfModel, title: str = "") -> str:
+    lines = [f"== {title} ==" if title else "== fitted constants =="]
+    for r in table_rows(model):
+        if r["kind"] == "extrinsic":
+            m, s = r["q"]
+            lines.append(f"  q  {r['feature']:<24s} {m:+8.3f} ± {s:.3f}")
+        elif r["kind"] == "constant":
+            m, s = r["a"]
+            lines.append(f"  C  {'':<24s} {m:8.3f} ± {s:.3f}")
+        else:
+            m, s = r["a"]
+            p = r.get("p")
+            ptxt = f"  p={p[0]:+6.2f}±{p[1]:.2f}" if p else " " * 16
+            lines.append(f"  a  {r['feature']:<24s} {m:8.2f} ± {s:<8.2f}"
+                         f"{ptxt}")
+    return "\n".join(lines)
+
+
+def scaling_report(model: PerfModel) -> str:
+    """Paper Table 6: extrinsic scaling powers; q=-1 is ideal scaling."""
+    lines = ["== scaling analysis (q = -1 ideal) =="]
+    for f, (m, s) in model.scaling_powers().items():
+        verdict = ("ideal" if abs(m + 1) < 0.1 else
+                   "super-linear" if m < -1.1 else "sub-optimal")
+        lines.append(f"  {f:<20s} q = {m:+.3f} ± {s:.3f}   [{verdict}]")
+    return "\n".join(lines)

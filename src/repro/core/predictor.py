@@ -1,0 +1,113 @@
+"""StepTimePredictor — the paper's model as a *runtime framework feature*.
+
+Fits the generic expression to (arch × shape × mesh) roofline cells
+produced by the dry-run, with
+
+  I = {n_layers, d_model, d_ff_eff, n_heads, head_dim, active params,
+       family(categorical)}
+  E = {chips, tokens(=batch·seq or batch for decode)}
+
+and then serves three launcher hooks:
+  * ``predict_step_seconds`` — ETA / throughput reporting
+  * ``straggler_threshold``  — feeds train.ft.StragglerDetector
+  * ``rank_meshes``          — elastic re-mesh candidate ranking without
+                               recompiling every candidate
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.fit import FitResult, fit_model
+from repro.core.generic_model import FeatureSpec, PerfModel
+
+FAMILIES = ("dense", "moe", "ssm", "hybrid", "vlm", "audio")
+
+CELL_SPEC = FeatureSpec(
+    numeric=("n_layers", "d_model", "d_ff_eff", "n_heads", "head_dim",
+             "active_params_b"),
+    categorical=(("family", FAMILIES), ("mode", ("train", "prefill",
+                                                 "decode"))),
+    extrinsic=("chips", "tokens_m"),
+)
+
+
+def cell_features(cfg: ModelConfig, shape: ShapeConfig,
+                  n_chips: int) -> Dict:
+    d_ff_eff = cfg.d_ff
+    if cfg.moe is not None:
+        d_ff_eff = max(cfg.moe.top_k * cfg.moe.d_ff_expert, 1)
+    if cfg.family == "ssm":
+        d_ff_eff = cfg.ssm.expand * cfg.d_model
+    tokens = shape.global_batch * (shape.seq_len
+                                   if shape.mode in ("train", "prefill")
+                                   else 1)
+    return {
+        "n_layers": cfg.n_layers,
+        "d_model": cfg.d_model,
+        "d_ff_eff": d_ff_eff,
+        "n_heads": cfg.n_heads,
+        "head_dim": cfg.get_head_dim(),
+        "active_params_b": max(cfg.param_count(active_only=True) / 1e9,
+                               1e-3),
+        "family": cfg.family,
+        "mode": shape.mode,
+        "chips": n_chips,
+        "tokens_m": max(tokens / 1e6, 1e-6),
+    }
+
+
+@dataclass
+class StepTimePredictor:
+    model: Optional[PerfModel] = None
+    fit_result: Optional[FitResult] = None
+
+    # -- fitting --------------------------------------------------------------
+    @classmethod
+    def fit_from_dryrun(cls, results_dir: str, *, reg: str = "l2",
+                        lam: float = 1e-3, seeds=tuple(range(5)),
+                        maxiter: int = 300) -> "StepTimePredictor":
+        from repro.configs import get_config, get_shape
+        samples, times = [], []
+        for name in sorted(os.listdir(results_dir)):
+            if not name.endswith(".json") or name == "summary.json":
+                continue
+            row = json.load(open(os.path.join(results_dir, name)))
+            if row.get("status") != "OK":
+                continue
+            cfg = get_config(row["arch"])
+            shape = get_shape(row["shape"])
+            samples.append(cell_features(cfg, shape, row["n_chips"]))
+            times.append(row["roofline"]["t_step"])
+        if len(samples) < 8:
+            raise ValueError(f"too few dry-run cells ({len(samples)})")
+        fr = fit_model(CELL_SPEC, samples, times, reg=reg, lam=lam,
+                       seeds=seeds, maxiter=maxiter)
+        return cls(model=fr.model, fit_result=fr)
+
+    # -- launcher hooks ---------------------------------------------------------
+    def predict_step_seconds(self, cfg: ModelConfig, shape: ShapeConfig,
+                             n_chips: int) -> float:
+        f = cell_features(cfg, shape, n_chips)
+        return float(self.model.predict([f])[0])
+
+    def straggler_threshold(self, cfg, shape, n_chips,
+                            tolerance: float = 1.5) -> float:
+        return tolerance * self.predict_step_seconds(cfg, shape, n_chips)
+
+    def rank_meshes(self, cfg: ModelConfig, shape: ShapeConfig,
+                    candidates: Sequence[int]) -> List[Tuple[int, float]]:
+        """Rank chip counts (or mesh sizes) by predicted step time."""
+        scored = [(n, self.predict_step_seconds(cfg, shape, n))
+                  for n in candidates]
+        return sorted(scored, key=lambda kv: kv[1])
+
+    def scaling_power_chips(self) -> float:
+        """Fitted q for the chips axis (q=-1 ⇒ ideal scaling)."""
+        return self.model.scaling_powers()["chips"][0]

@@ -1,0 +1,11 @@
+"""Deterministic synthetic data pipelines (no downloads; offline container).
+
+``TokenStream`` — zipf-ish LM token batches with a fixed seed; the stream
+is *stateless by step index*, so training can resume from any checkpoint
+step and see exactly the continuation batches (required for the bitwise
+restart-continuation test).
+"""
+from repro.data.synthetic import (TokenStream, image_batch, lenet_batch,
+                                  make_batch_for)
+
+__all__ = ["TokenStream", "image_batch", "lenet_batch", "make_batch_for"]

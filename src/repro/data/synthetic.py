@@ -1,0 +1,68 @@
+"""Synthetic data generators (deterministic, step-indexed)."""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.configs.lenet5 import DATASET_SHAPES, LeNet5Config, N_CLASSES
+
+
+class TokenStream:
+    """Stateless-by-step synthetic LM token stream.
+
+    Tokens follow a zipf-like marginal with a deterministic per-step seed,
+    so ``batch(step)`` is reproducible regardless of history (checkpoint
+    restart sees identical continuation data).
+    """
+
+    def __init__(self, vocab: int, batch: int, seq: int, seed: int = 0):
+        self.vocab, self.batch_size, self.seq, self.seed = vocab, batch, seq, seed
+        ranks = np.arange(1, vocab + 1, dtype=np.float64)
+        p = 1.0 / ranks
+        self._p = (p / p.sum()).astype(np.float64)
+
+    def batch_np(self, step: int) -> np.ndarray:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step]))
+        return rng.choice(self.vocab, size=(self.batch_size, self.seq),
+                          p=self._p).astype(np.int32)
+
+    def batch(self, step: int) -> jnp.ndarray:
+        return jnp.asarray(self.batch_np(step))
+
+
+def image_batch(shape, batch: int, step: int, seed: int = 0):
+    rng = np.random.default_rng(np.random.SeedSequence([seed, step]))
+    images = rng.normal(size=(batch,) + tuple(shape)).astype(np.float32)
+    labels = rng.integers(0, N_CLASSES, size=(batch,)).astype(np.int32)
+    return jnp.asarray(images), jnp.asarray(labels)
+
+
+def lenet_batch(cfg: LeNet5Config, step: int = 0, seed: int = 0,
+                batch: Optional[int] = None) -> Dict[str, jnp.ndarray]:
+    images, labels = image_batch(DATASET_SHAPES[cfg.dataset],
+                                 batch or cfg.batch_size, step, seed)
+    return {"images": images, "labels": labels}
+
+
+def make_batch_for(cfg: ModelConfig, batch: int, seq: int, step: int = 0,
+                   seed: int = 0) -> Dict[str, jnp.ndarray]:
+    """A full training batch for any assigned architecture (stub frontends
+    get precomputed embeddings, per the assignment)."""
+    stream = TokenStream(cfg.vocab_size, batch, seq, seed)
+    out: Dict[str, jnp.ndarray] = {"tokens": stream.batch(step)}
+    rng = np.random.default_rng(np.random.SeedSequence([seed, step, 7]))
+    if cfg.frontend == "vision_patch_stub":
+        n = cfg.n_frontend_tokens
+        out["tokens"] = out["tokens"][:, :max(seq - n, 1)]
+        out["patches"] = jnp.asarray(rng.normal(
+            size=(batch, n, cfg.d_model)).astype(np.float32) * 0.02)
+    if cfg.is_encoder_decoder:
+        out["frames"] = jnp.asarray(rng.normal(
+            size=(batch, cfg.encoder_seq_len, cfg.d_model)
+        ).astype(np.float32) * 0.02)
+    return out

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the compute hot spots, with pure-jnp oracles.
+
+Layout per kernel:
+  <name>.py — pl.pallas_call + BlockSpec implementation (TPU target)
+  ref.py    — pure-jnp oracles the kernels are tested against
+  ops.py    — jit-friendly dispatch wrappers used by the model code
+"""

@@ -1,0 +1,19 @@
+"""Pure-jnp oracles for the Pallas kernels (small-shape ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import AttnSpec, attend_naive
+from repro.models.ssm import ssd_reference
+
+
+def attention_ref(q, k, v, q_pos, kv_pos, spec: AttnSpec) -> jax.Array:
+    """O(S²) reference attention (models/attention.attend_naive)."""
+    return attend_naive(q, k, v, q_pos, kv_pos, spec)
+
+
+def ssd_ref(x, dt, A, B, C, D, chunk: int = 64):
+    """Chunked SSD reference (models/ssm.ssd_reference), returns
+    (y, final_state)."""
+    return ssd_reference(x, dt, A, B, C, D, chunk=chunk, return_state=True)

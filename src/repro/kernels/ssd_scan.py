@@ -1,0 +1,115 @@
+"""Mamba2 SSD chunked scan as a Pallas TPU kernel.
+
+TPU adaptation of the SSD algorithm (arXiv:2405.21060 §6): the sequence is
+split into chunks of Q tokens; within a chunk the computation is two
+MXU-shaped matmuls (C·Bᵀ "attention" score and score·X), and across chunks
+an O(1)-state recurrence is carried in fp32 VMEM scratch — the chunk axis
+is the innermost (sequential) grid dimension, exactly like the KV axis of
+flash attention.
+
+  grid = (batch, heads, n_chunks)
+  blocks: x (Q, P) · dt (Q,) · B/C (Q, N)  in VMEM
+  scratch: state (P, N) fp32, persists across the chunk dimension
+
+Outputs y (Q, P) per block plus the final state (for decode prefill).
+Validated against ``models.ssm.ssd_reference`` in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.experimental.pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+import jax.numpy as jnp
+
+
+def _kernel(x_ref, dt_ref, A_ref, B_ref, C_ref, D_ref,    # in
+            y_ref, st_ref,                                # out
+            state_ref,                                    # scratch
+            *, n_chunks: int):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, :, 0].astype(jnp.float32)            # [Q, P]
+    dt = dt_ref[0, :, 0].astype(jnp.float32)          # [Q]
+    Bm = B_ref[0, :, 0].astype(jnp.float32)           # [Q, N]
+    Cm = C_ref[0, :, 0].astype(jnp.float32)           # [Q, N]
+    A = A_ref[0]                                      # scalar
+    D = D_ref[0]                                      # scalar
+
+    dtA = dt * A                                      # [Q]
+    csum = jnp.cumsum(dtA)                            # inclusive
+    # intra-chunk decay L[q,k] = exp(csum[q]-csum[k]) for k<=q
+    diff = csum[:, None] - csum[None, :]
+    Q = x.shape[0]
+    row = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.where(col <= row, jnp.exp(diff), 0.0)
+
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ()))) * L
+    y = jax.lax.dot_general(scores * dt[None, :], x,
+                            (((1,), (0,)), ((), ())))          # intra
+
+    # inter-chunk: y += (C * exp(csum)) @ state_prev
+    decay_in = jnp.exp(csum)[:, None]                          # [Q,1]
+    y = y + jax.lax.dot_general(Cm * decay_in, state_ref[...],
+                                (((1,), (1,)), ((), ())))      # [Q,P]
+    y = y + x * D
+    y_ref[0, :, 0] = y.astype(y_ref.dtype)
+
+    # state update: state_new = state*chunk_decay + X^T(dt·decay_states·B)
+    chunk_decay = jnp.exp(csum[-1])
+    decay_states = jnp.exp(csum[-1] - csum)[:, None]           # [Q,1]
+    upd = jax.lax.dot_general(x, Bm * (dt[:, None] * decay_states),
+                              (((0,), (0,)), ((), ())))        # [P,N]
+    state_ref[...] = state_ref[...] * chunk_decay + upd
+
+    @pl.when(c == n_chunks - 1)
+    def _emit():
+        st_ref[0, 0] = state_ref[...].astype(st_ref.dtype)
+
+
+def ssd_scan(x, dt, A, B, C, D, *, chunk: int = 256,
+             interpret: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """x: [b,l,h,p]; dt: [b,l,h]; A,D: [h]; B,C: [b,l,g,n].
+    Returns (y [b,l,h,p], final_state [b,h,p,n]). l % chunk == 0."""
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert l % chunk == 0, (l, chunk)
+    nch = l // chunk
+    rep = h // g
+
+    kernel = functools.partial(_kernel, n_chunks=nch)
+
+    def g_index(bi, hi, ci, rep=rep):
+        return (bi, ci, hi // rep, 0)
+
+    y, st = pl.pallas_call(
+        kernel,
+        grid=(b, h, nch),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda bi, hi, ci: (bi, ci, hi)),
+            pl.BlockSpec((1,), lambda bi, hi, ci: (hi,)),
+            pl.BlockSpec((1, chunk, 1, n), g_index),
+            pl.BlockSpec((1, chunk, 1, n), g_index),
+            pl.BlockSpec((1,), lambda bi, hi, ci: (hi,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, l, h, p), x.dtype),
+            jax.ShapeDtypeStruct((b, h, p, n), x.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt.astype(jnp.float32), A.astype(jnp.float32), B, C,
+      D.astype(jnp.float32))
+    return y, st

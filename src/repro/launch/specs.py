@@ -1,0 +1,238 @@
+"""ShapeDtypeStruct input specs + shardings for every (arch × shape) cell.
+
+The same pattern shannon/kernels uses: weak-type-correct, shardable stand-
+ins, no device allocation. ``cell_program`` returns everything the dry-run
+(and a real launcher) needs: the step callable, example arg structs, and
+the matching in/out shardings.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import cell_is_runnable
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.dist.sharding import (STRATEGIES, batch_pspec, logical_to_pspec,
+                                 param_shardings)
+from repro.models import model as MD
+from repro.models.layers import Param, is_param
+from repro.train.step import TrainState, init_train_state, make_train_step
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), dtype)
+
+
+def _batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def _nbatch(mesh: Mesh) -> int:
+    n = 1
+    for a in _batch_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def _pentry(axes: Tuple[str, ...]):
+    return axes if len(axes) > 1 else (axes[0] if axes else None)
+
+
+# ---------------------------------------------------------------------------
+# Batch specs
+# ---------------------------------------------------------------------------
+
+def batch_structs(cfg: ModelConfig, B: int, S: int) -> Dict[str, Any]:
+    out: Dict[str, Any] = {}
+    s_text = S
+    if cfg.frontend == "vision_patch_stub":
+        s_text = max(S - cfg.n_frontend_tokens, 1)
+        out["patches"] = _sds((B, cfg.n_frontend_tokens, cfg.d_model),
+                              jnp.float32)
+    out["tokens"] = _sds((B, s_text), jnp.int32)
+    if cfg.is_encoder_decoder:
+        out["frames"] = _sds((B, cfg.encoder_seq_len, cfg.d_model),
+                             jnp.float32)
+    return out
+
+
+def batch_shardings(batch_tree, mesh: Mesh):
+    entry = _pentry(_batch_axes(mesh))
+    return jax.tree.map(
+        lambda x: NamedSharding(mesh, P(entry, *([None] * (x.ndim - 1)))),
+        batch_tree)
+
+
+# ---------------------------------------------------------------------------
+# Cache specs
+# ---------------------------------------------------------------------------
+
+def _cache_pspec(role: str, shape, mesh: Mesh) -> P:
+    """Role-aware PartitionSpec; dims addressed from the right."""
+    nd = len(shape)
+    entries = [None] * nd
+    baxes = _batch_axes(mesh)
+    nb = _nbatch(mesh)
+    model_ok = "model" in mesh.shape
+    msz = mesh.shape.get("model", 1)
+
+    def set_from_right(i_from_right, value):
+        entries[nd - i_from_right] = value
+
+    if role in ("kv",):                      # [..., B, cap, kvh, hd]
+        B, cap, kvh, hd = shape[-4], shape[-3], shape[-2], shape[-1]
+        if baxes and B % nb == 0:
+            set_from_right(4, _pentry(baxes))
+        elif "data" in mesh.shape and cap % mesh.shape["data"] == 0:
+            set_from_right(3, "data")
+        if model_ok and kvh % msz == 0:
+            set_from_right(2, "model")
+        elif model_ok and hd % msz == 0:
+            set_from_right(1, "model")
+    elif role in ("lat", "rope"):            # [..., B, cap, r]
+        B, cap, r = shape[-3], shape[-2], shape[-1]
+        if baxes and B % nb == 0:
+            set_from_right(3, _pentry(baxes))
+        elif "data" in mesh.shape and cap % mesh.shape["data"] == 0:
+            set_from_right(2, "data")
+        if role == "lat" and model_ok and r % msz == 0:
+            set_from_right(1, "model")
+    elif role == "conv":                     # [..., B, K-1, conv_dim]
+        B, cdim = shape[-3], shape[-1]
+        if baxes and B % nb == 0:
+            set_from_right(3, _pentry(baxes))
+        if model_ok and cdim % msz == 0:
+            set_from_right(1, "model")
+    elif role == "ssd":                      # [..., B, H, Pd, N]
+        B, H = shape[-4], shape[-3]
+        if baxes and B % nb == 0:
+            set_from_right(4, _pentry(baxes))
+        if model_ok and H % msz == 0:
+            set_from_right(3, "model")
+    # "pos": replicated
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def cache_specs(cfg: ModelConfig, B: int, cap: int, mesh: Mesh,
+                dtype=jnp.bfloat16):
+    """Returns (struct_tree, sharding_tree) for the decode caches."""
+    structs = MD.build_decode_caches(
+        cfg, B, cap, dtype,
+        mk=lambda shape, dt, role: _sds(shape, dt))
+    pspecs = MD.build_decode_caches(
+        cfg, B, cap, dtype,
+        mk=lambda shape, dt, role: NamedSharding(
+            mesh, _cache_pspec(role, shape, mesh)))
+    return structs, pspecs
+
+
+# ---------------------------------------------------------------------------
+# State specs
+# ---------------------------------------------------------------------------
+
+def _replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+def state_shardings(state_shapes: TrainState, mesh: Mesh,
+                    strategy: str) -> TrainState:
+    def shard_param_tree(tree):
+        return param_shardings(tree, mesh, strategy) if tree is not None \
+            else None
+
+    opt = state_shapes.opt
+    new_opt = type(opt)(_replicated(mesh),
+                        shard_param_tree(opt.mu), shard_param_tree(opt.nu))
+    return TrainState(shard_param_tree(state_shapes.params), new_opt,
+                      shard_param_tree(state_shapes.ef))
+
+
+def params_only_shardings(params_shapes, mesh: Mesh, strategy: str):
+    return param_shardings(params_shapes, mesh, strategy)
+
+
+# ---------------------------------------------------------------------------
+# Cell programs
+# ---------------------------------------------------------------------------
+
+class CellProgram(NamedTuple):
+    fn: Any                 # callable to jit
+    args: Tuple             # ShapeDtypeStruct pytrees
+    in_shardings: Tuple
+    donate_argnums: Tuple[int, ...]
+    kind: str               # train | prefill | decode
+
+
+def input_specs(arch_or_cfg, shape: ShapeConfig, mesh: Mesh,
+                tcfg: Optional[TrainConfig] = None,
+                strategy: str = "fsdp_tp") -> CellProgram:
+    """Build the lowering spec for one (arch × shape × mesh) cell."""
+    from repro.configs import get_config
+    cfg = (arch_or_cfg if isinstance(arch_or_cfg, ModelConfig)
+           else get_config(arch_or_cfg))
+    tcfg = tcfg or TrainConfig()
+    ok, why = cell_is_runnable(cfg, shape)
+    if not ok:
+        raise ValueError(f"cell not runnable: {why}")
+
+    if shape.mode == "train":
+        state_shapes = jax.eval_shape(
+            lambda: init_train_state(jax.random.PRNGKey(0), cfg, tcfg))
+        st_shard = state_shardings(state_shapes, mesh, strategy)
+        batch = batch_structs(cfg, shape.global_batch, shape.seq_len)
+        b_shard = batch_shardings(batch, mesh)
+        fn = make_train_step(cfg, tcfg, microbatches=shape.microbatches)
+        return CellProgram(fn, (state_shapes, batch), (st_shard, b_shard),
+                           (0,), "train")
+
+    params_shapes = jax.eval_shape(
+        lambda: MD.init_model(jax.random.PRNGKey(0), cfg))
+    p_shard = params_only_shardings(params_shapes, mesh, strategy)
+
+    if shape.mode == "prefill":
+        batch = batch_structs(cfg, shape.global_batch, shape.seq_len)
+        b_shard = batch_shardings(batch, mesh)
+
+        def prefill_fn(params, b):
+            logits, caches, enc_kv = MD.prefill(params, cfg, b)
+            return logits, caches
+        return CellProgram(prefill_fn, (params_shapes, batch),
+                           (p_shard, b_shard), (), "prefill")
+
+    # decode: one new token against a seq_len cache
+    B, cap = shape.global_batch, shape.seq_len
+    caches, c_shard = cache_specs(cfg, B, cap, mesh)
+    token = _sds((B, 1), jnp.int32)
+    t_shard = NamedSharding(mesh, P(_pentry(_batch_axes(mesh))
+                                    if B % _nbatch(mesh) == 0 else None,
+                                    None))
+    pos = _sds((), jnp.int32)
+    pos_shard = _replicated(mesh)
+    args = [params_shapes, caches, token, pos]
+    shards = [p_shard, c_shard, t_shard, pos_shard]
+
+    if cfg.is_encoder_decoder:
+        hd = cfg.get_head_dim()
+        n = cfg.n_layers
+        ekv_s = _sds((n, B, cfg.encoder_seq_len, cfg.n_kv_heads, hd),
+                     jnp.bfloat16)
+        ekv_shard = NamedSharding(
+            mesh, _cache_pspec("kv", ekv_s.shape, mesh))
+
+        def decode_fn(params, caches, token, pos, ek, ev):
+            return MD.decode_step(params, cfg, caches, token, pos,
+                                  enc_kv=(ek, ev))
+        args += [ekv_s, ekv_s]
+        shards += [ekv_shard, ekv_shard]
+    else:
+        def decode_fn(params, caches, token, pos):
+            return MD.decode_step(params, cfg, caches, token, pos)
+
+    return CellProgram(decode_fn, tuple(args), tuple(shards), (1,), "decode")

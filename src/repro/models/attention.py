@@ -1,0 +1,328 @@
+"""Attention blocks: GQA (with bias / sliding window / softcap) and MLA.
+
+Two execution paths, numerically identical:
+
+* ``attend_blockwise`` — lax.scan over KV blocks with online softmax
+  (flash-attention structure in pure jnp). This is the default for training
+  and prefill; memory is O(S·block) instead of O(S²), which the 32k-token
+  assigned shapes require even at dry-run time.
+* ``attend_naive`` — the O(S²) oracle, used for small-shape tests and as
+  the reference for the Pallas kernel.
+
+On TPU the ``repro.kernels.flash_attention`` Pallas kernel slots in through
+``repro.kernels.ops.attention`` (same signature); CPU tests run both paths
+and assert they agree.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig, ModelConfig
+from repro.dist.sharding import BATCH, maybe_constrain
+from repro.models.layers import (NEG_INF, Param, Params, apply_rope, dense,
+                                 init_dense, make_param, softcap)
+
+
+class AttnSpec(NamedTuple):
+    """Resolved per-call attention behaviour."""
+    causal: bool = True
+    window: int = 0          # 0 -> global
+    logit_softcap: float = 0.0
+    scale: float = 0.0       # 0 -> 1/sqrt(head_dim)
+
+
+# ---------------------------------------------------------------------------
+# Core attention math (grouped-query; q heads = kv heads * group)
+# ---------------------------------------------------------------------------
+
+PAD_POS = 2 ** 30    # sentinel position for padded / empty KV slots
+
+
+def _mask_bias(q_pos: jax.Array, kv_pos: jax.Array, spec: AttnSpec) -> jax.Array:
+    """[q, kv] additive bias: 0 where attendable, NEG_INF elsewhere.
+
+    Slots holding the PAD_POS sentinel (block padding, empty ring-cache
+    slots) are masked unconditionally — causality alone must not be relied
+    on (non-causal encoder attention also pads)."""
+    ok = kv_pos[None, :] < PAD_POS
+    if spec.causal:
+        ok &= kv_pos[None, :] <= q_pos[:, None]
+    if spec.window:
+        ok &= kv_pos[None, :] > (q_pos[:, None] - spec.window)
+    ok = jnp.broadcast_to(ok, (q_pos.shape[0], kv_pos.shape[0]))
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def attend_naive(q: jax.Array, k: jax.Array, v: jax.Array,
+                 q_pos: jax.Array, kv_pos: jax.Array,
+                 spec: AttnSpec) -> jax.Array:
+    """q: [B,Sq,Hq,hd]; k,v: [B,Skv,Hkv,hd] -> [B,Sq,Hq,hd]. O(Sq·Skv) memory."""
+    B, Sq, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    scale = spec.scale or 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, Sq, Hkv, G, hd)
+    s = jnp.einsum("bqkgh,btkh->bkgqt", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if spec.logit_softcap:
+        s = softcap(s, spec.logit_softcap)
+    s = s + _mask_bias(q_pos, kv_pos, spec)[None, None, None]
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqt,btkh->bqkgh", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, Hq, hd).astype(q.dtype)
+
+
+def attend_blockwise(q: jax.Array, k: jax.Array, v: jax.Array,
+                     q_pos: jax.Array, kv_pos: jax.Array,
+                     spec: AttnSpec, block: int = 1024) -> jax.Array:
+    """Online-softmax, blocked over BOTH q and kv (flash structure).
+
+    q-blocking matters even in this jnp fallback: the softmax state
+    (m, l, acc) carried across KV blocks is per-q-block-sized, so the
+    lowered loop's HBM traffic matches what the Pallas kernel does in
+    VMEM — a full-sequence fp32 accumulator rewritten every KV step would
+    dominate the memory roofline at 32k+ contexts (measured: ~100× bytes).
+    Per-block bodies are ``jax.checkpoint``ed so reverse-mode recomputes
+    scores instead of storing them (flash-backward shape).
+    """
+    B, Sq, Hq, hd = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    if Skv <= block:
+        return attend_naive(q, k, v, q_pos, kv_pos, spec)
+    G = Hq // Hkv
+    scale = spec.scale or 1.0 / math.sqrt(hd)
+
+    nkv = -(-Skv // block)
+    pad_kv = nkv * block - Skv
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, (0, pad_kv), constant_values=PAD_POS)
+    bq = min(block, Sq) if Sq > 1 else 1
+    nq = -(-Sq // bq)
+    pad_q = nq * bq - Sq
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, (0, pad_q), constant_values=PAD_POS - 1)
+
+    kb = k.reshape(B, nkv, block, Hkv, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nkv, block, Hkv, hd).transpose(1, 0, 2, 3, 4)
+    pb = kv_pos.reshape(nkv, block)
+    qb = q.reshape(B, nq, bq, Hkv, G, hd).transpose(1, 0, 2, 3, 4, 5)
+    qpb = q_pos.reshape(nq, bq)
+
+    def q_block(args):
+        qc, qp = args                                  # [B,bq,Hkv,G,hd], [bq]
+        qc = qc.astype(jnp.float32) * scale
+
+        @jax.checkpoint
+        def body(carry, xs):
+            m, l, acc = carry
+            kc, vc, pc = xs
+            s = jnp.einsum("bqkgh,btkh->bkgqt", qc, kc.astype(jnp.float32))
+            if spec.logit_softcap:
+                s = softcap(s, spec.logit_softcap)
+            s = s + _mask_bias(qp, pc, spec)[None, None, None]
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l = l * alpha + p.sum(axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bkgqt,btkh->bkgqh", p, vc.astype(jnp.float32))
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, Hkv, G, bq), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, bq), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, bq, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kb, vb, pb))
+        o = acc / jnp.maximum(l, 1e-30)[..., None]     # [B,Hkv,G,bq,hd]
+        return o.astype(q.dtype)
+
+    ob = jax.lax.map(q_block, (qb, qpb))               # [nq,B,Hkv,G,bq,hd]
+    o = ob.transpose(1, 0, 4, 2, 3, 5).reshape(B, nq * bq, Hq, hd)
+    return o[:, :Sq]
+
+
+def attend(q, k, v, q_pos, kv_pos, spec: AttnSpec, *,
+           block: int = 1024) -> jax.Array:
+    """Dispatch: kernel wrapper (TPU) / blockwise jnp (CPU + dry-run)."""
+    from repro.kernels import ops  # late import; kernels are optional
+    return ops.attention(q, k, v, q_pos, kv_pos, spec, block=block,
+                         fallback=attend_blockwise)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block (qwen/gemma/smollm/nemotron/internvl/whisper/llama4)
+# ---------------------------------------------------------------------------
+
+def init_gqa(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    d, hd = cfg.d_model, cfg.get_head_dim()
+    ks = jax.random.split(key, 4)
+    bias = cfg.qkv_bias
+    return {
+        "wq": init_dense(ks[0], d, cfg.n_heads * hd, ("embed", "heads"),
+                         dtype, bias=bias, bias_axis="heads"),
+        "wk": init_dense(ks[1], d, cfg.n_kv_heads * hd, ("embed", "kv_heads"),
+                         dtype, bias=bias, bias_axis="kv_heads"),
+        "wv": init_dense(ks[2], d, cfg.n_kv_heads * hd, ("embed", "kv_heads"),
+                         dtype, bias=bias, bias_axis="kv_heads"),
+        "wo": init_dense(ks[3], cfg.n_heads * hd, d, ("heads", "embed"), dtype),
+    }
+
+
+def gqa_forward(params: Params, x: jax.Array, cfg: ModelConfig,
+                spec: AttnSpec, positions: jax.Array,
+                cache: Optional[Tuple[jax.Array, jax.Array]] = None,
+                cache_pos: Optional[jax.Array] = None,
+                kv_override: Optional[Tuple[jax.Array, jax.Array]] = None,
+                ) -> Tuple[jax.Array, Optional[Tuple[jax.Array, ...]]]:
+    """x: [B,S,D]. cache: (k,v,pos) — k,v [B,cap,Hkv,hd] ring buffers of
+    capacity ``cap`` (== window for local layers), pos [cap] the absolute
+    position stored in each slot (-2^30 for empty → masked by causality).
+
+    * train/prefill: cache is None -> attend within x, return (y, (k,v,pos)).
+    * decode: cache given, new kv written at slot ``cache_pos % cap``.
+    * cross-attention: kv_override supplies precomputed (k, v); no cache.
+    """
+    B, S, D = x.shape
+    hd = cfg.get_head_dim()
+    q = maybe_constrain(dense(params["wq"], x).reshape(B, S, cfg.n_heads,
+                                                       hd), BATCH)
+    if kv_override is None:
+        k = maybe_constrain(
+            dense(params["wk"], x).reshape(B, S, cfg.n_kv_heads, hd), BATCH)
+        v = maybe_constrain(
+            dense(params["wv"], x).reshape(B, S, cfg.n_kv_heads, hd), BATCH)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    else:
+        k, v = kv_override
+    if cache is not None and kv_override is None:
+        ck, cv, cpos = cache
+        cap = ck.shape[1]
+        slot = jnp.mod(cache_pos, cap)
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                          (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                          (0, slot, 0, 0))
+        cpos = jax.lax.dynamic_update_slice(
+            cpos, positions.astype(cpos.dtype), (slot,))
+        o = attend(q, ck, cv, positions, cpos, spec, block=cfg.attn_block)
+        new_cache = (ck, cv, cpos)
+    else:
+        q_pos = positions
+        kv_pos = q_pos if kv_override is None else jnp.arange(k.shape[1])
+        o = attend(q, k, v, q_pos, kv_pos, spec, block=cfg.attn_block)
+        new_cache = (k, v, q_pos)
+    y = dense(params["wo"], o.reshape(B, S, cfg.n_heads * hd))
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA — Multi-head Latent Attention (DeepSeek-V3)
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    m: MLAConfig = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": init_dense(ks[0], d, m.q_lora_rank, ("embed", None), dtype),
+        "wq_b": init_dense(ks[1], m.q_lora_rank, H * qk, (None, "heads"), dtype),
+        # kv down-projection: latent + shared rope key
+        "wkv_a": init_dense(ks[2], d, m.kv_lora_rank + m.qk_rope_head_dim,
+                            ("embed", None), dtype),
+        # up-projections out of the latent
+        "wk_b": init_dense(ks[3], m.kv_lora_rank, H * m.qk_nope_head_dim,
+                           (None, "heads"), dtype),
+        "wv_b": init_dense(ks[4], m.kv_lora_rank, H * m.v_head_dim,
+                           (None, "heads"), dtype),
+        "wo": init_dense(ks[5], H * m.v_head_dim, d, ("heads", "embed"), dtype),
+    }
+
+
+def _mla_qkv(params: Params, x: jax.Array, cfg: ModelConfig,
+             positions: jax.Array):
+    """Shared projection math. Returns q_nope,q_rope,latent,k_rope."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    q = dense(params["wq_b"], dense(params["wq_a"], x))
+    q = q.reshape(B, S, H, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope = q[..., :m.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., m.qk_nope_head_dim:], positions, cfg.rope_theta)
+    kv = dense(params["wkv_a"], x)
+    latent = kv[..., :m.kv_lora_rank]                      # [B,S,rank]
+    k_rope = apply_rope(kv[..., m.kv_lora_rank:][:, :, None, :],
+                        positions, cfg.rope_theta)[:, :, 0]  # [B,S,rope_hd]
+    return q_nope, q_rope, latent, k_rope
+
+
+def mla_forward(params: Params, x: jax.Array, cfg: ModelConfig,
+                spec: AttnSpec, positions: jax.Array,
+                cache: Optional[Tuple[jax.Array, jax.Array]] = None,
+                cache_pos: Optional[jax.Array] = None):
+    """MLA attention. cache = (latent [B,T,rank], k_rope [B,T,rope_hd]).
+
+    Train/prefill path expands K/V out of the latent (naive form); decode
+    path uses the *absorbed* form — scores and values live in latent space,
+    so the per-step FLOPs don't scale with H·T·hd but with T·rank.
+    """
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_rope, latent, k_rope = _mla_qkv(params, x, cfg, positions)
+
+    if cache is None:
+        # naive: expand full K/V, run grouped attention with Hkv = H
+        k_nope = dense(params["wk_b"], latent).reshape(
+            B, S, H, m.qk_nope_head_dim)
+        v = dense(params["wv_b"], latent).reshape(B, S, H, m.v_head_dim)
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                      (B, S, H, m.qk_rope_head_dim))], -1)
+        q_full = jnp.concatenate([q_nope, q_rope], -1)
+        # pad v to qk dim so we can reuse attend(); slice after
+        pad = q_full.shape[-1] - m.v_head_dim
+        v_pad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, pad)))
+        o = attend(q_full, k_full, v_pad, positions, positions,
+                   AttnSpec(causal=spec.causal, window=spec.window,
+                            logit_softcap=spec.logit_softcap, scale=scale),
+                   block=cfg.attn_block)
+        o = o[..., :m.v_head_dim]
+        y = dense(params["wo"], o.reshape(B, S, H * m.v_head_dim))
+        return y, (latent, k_rope, positions)
+
+    # ---- decode: absorbed attention over the latent cache -----------------
+    c_lat, c_rope, cpos = cache
+    T = c_lat.shape[1]
+    slot = jnp.mod(cache_pos, T)
+    c_lat = jax.lax.dynamic_update_slice(c_lat, latent.astype(c_lat.dtype),
+                                         (0, slot, 0))
+    c_rope = jax.lax.dynamic_update_slice(c_rope, k_rope.astype(c_rope.dtype),
+                                          (0, slot, 0))
+    cpos = jax.lax.dynamic_update_slice(cpos, positions.astype(cpos.dtype),
+                                        (slot,))
+    wk_b = params["wk_b"]["kernel"].value.reshape(
+        m.kv_lora_rank, H, m.qk_nope_head_dim)
+    # absorb W_uk into q:  q_lat[b,s,h,r] = q_nope · W_uk^T
+    q_lat = jnp.einsum("bshn,rhn->bshr", q_nope.astype(jnp.float32),
+                       wk_b.astype(jnp.float32))
+    s_nope = jnp.einsum("bshr,btr->bhst", q_lat, c_lat.astype(jnp.float32))
+    s_rope = jnp.einsum("bshn,btn->bhst", q_rope.astype(jnp.float32),
+                        c_rope.astype(jnp.float32))
+    s = (s_nope + s_rope) * scale
+    s = s + _mask_bias(positions, cpos, spec)[None, None]
+    p = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhst,btr->bshr", p, c_lat.astype(jnp.float32))
+    wv_b = params["wv_b"]["kernel"].value.reshape(m.kv_lora_rank, H,
+                                                  m.v_head_dim)
+    o = jnp.einsum("bshr,rhv->bshv", o_lat, wv_b.astype(jnp.float32))
+    y = dense(params["wo"], o.reshape(B, S, H * m.v_head_dim).astype(x.dtype))
+    return y, (c_lat, c_rope, cpos)

@@ -1,0 +1,106 @@
+"""LeNet-5 in JAX — the paper's experimental subject.
+
+Parameterised exactly by the paper's Table-1 intrinsic space: kernel size,
+pool size, activation, #filters, learning rate (consumed by the optimizer),
+padding mode, stride, dropout probability; plus dataset (image shape).
+Used by ``repro.perf.sweep`` to reproduce the measured-time dataset the
+generic performance model is fitted to.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.lenet5 import DATASET_SHAPES, LeNet5Config, N_CLASSES
+from repro.models.layers import Param, Params, activation_fn, make_param
+
+
+def _eff_padding(n: int, k: int, padding: str) -> str:
+    """Degenerate-size guard: fall back to SAME when the map is smaller
+    than the kernel (the paper's sampled space contains such corners)."""
+    return "same" if (padding == "valid" and n < k) else padding
+
+
+def _conv_out(n: int, k: int, stride: int, padding: str) -> int:
+    if _eff_padding(n, k, padding) == "same":
+        return -(-n // stride)
+    return (n - k) // stride + 1
+
+
+def _pool_window(n: int, p: int) -> int:
+    return min(p, n)
+
+
+def _pool_out(n: int, p: int) -> int:
+    return n // _pool_window(n, p)
+
+
+def feature_dims(cfg: LeNet5Config) -> Tuple[int, int, int]:
+    """Spatial dims after conv1/pool1/conv2/pool2 and the flat size."""
+    h, w, _ = DATASET_SHAPES[cfg.dataset]
+    for _ in range(2):
+        h = _pool_out(_conv_out(h, cfg.kernel_size, cfg.stride, cfg.padding),
+                      cfg.pool_size)
+        w = _pool_out(_conv_out(w, cfg.kernel_size, cfg.stride, cfg.padding),
+                      cfg.pool_size)
+    return h, w, h * w * (2 * cfg.n_filters)
+
+
+def init_lenet(key, cfg: LeNet5Config) -> Params:
+    h, w, c = DATASET_SHAPES[cfg.dataset]
+    f = cfg.n_filters
+    ks = jax.random.split(key, 5)
+    _, _, flat = feature_dims(cfg)
+    k = cfg.kernel_size
+    return {
+        "conv1": make_param(ks[0], (k, k, c, f), (None, None, None, None),
+                            jnp.float32, scale=1.0 / (k * k * c) ** 0.5),
+        "conv2": make_param(ks[1], (k, k, f, 2 * f), (None,) * 4,
+                            jnp.float32, scale=1.0 / (k * k * f) ** 0.5),
+        "fc1": make_param(ks[2], (flat, 120), (None, None), jnp.float32),
+        "fc2": make_param(ks[3], (120, 84), (None, None), jnp.float32),
+        "out": make_param(ks[4], (84, N_CLASSES), (None, None), jnp.float32),
+    }
+
+
+def _conv(x, w, stride, padding):
+    k = w.shape[0]
+    pad = _eff_padding(min(x.shape[1], x.shape[2]), k, padding)
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding=pad.upper(),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _pool(x, p):
+    ph = _pool_window(x.shape[1], p)
+    pw = _pool_window(x.shape[2], p)
+    y = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                              (1, ph, pw, 1), (1, ph, pw, 1), "VALID")
+    return y
+
+
+def lenet_forward(params: Params, images: jax.Array, cfg: LeNet5Config,
+                  *, train: bool = False, rng=None) -> jax.Array:
+    """images [B,H,W,C] -> logits [B,10]."""
+    act = activation_fn(cfg.activation)
+    x = act(_conv(images, params["conv1"].value, cfg.stride, cfg.padding))
+    x = _pool(x, cfg.pool_size)
+    x = act(_conv(x, params["conv2"].value, cfg.stride, cfg.padding))
+    x = _pool(x, cfg.pool_size)
+    x = x.reshape(x.shape[0], -1)
+    x = act(x @ params["fc1"].value)
+    if train and cfg.dropout > 0:
+        keep = jax.random.bernoulli(rng, 1.0 - cfg.dropout, x.shape)
+        x = jnp.where(keep, x / (1.0 - cfg.dropout), 0.0)
+    x = act(x @ params["fc2"].value)
+    return x @ params["out"].value
+
+
+def lenet_loss(params: Params, batch: Dict[str, jax.Array],
+               cfg: LeNet5Config, rng) -> jax.Array:
+    logits = lenet_forward(params, batch["images"], cfg, train=True, rng=rng)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()

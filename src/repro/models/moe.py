@@ -1,0 +1,134 @@
+"""Mixture-of-experts block: top-k routing, sort-based capacity dispatch.
+
+Design notes (TPU adaptation):
+
+* Dispatch avoids the GShard one-hot ``[tokens, experts, capacity]`` tensor
+  (O(T·E·C) memory is untenable at DeepSeek scale). Instead tokens are
+  *sorted by expert id*; each (token, k) slot gets a rank within its expert
+  via a cumulative count, and rows are scattered into a dense per-expert
+  buffer ``[E, C, d_model]``. Overflow beyond capacity C is dropped (weights
+  renormalized), matching capacity-factor semantics.
+* The expert FFN is a single batched einsum over the ``[E, C, M]`` buffer —
+  experts shard over the ``model`` (expert-parallel) mesh axis, tokens over
+  ``data``; the scatter/gather pair is where the all-to-all materializes
+  under SPMD.
+* Router math in fp32; aux load-balance loss (Switch-style) returned to the
+  caller.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig, ModelConfig
+from repro.dist.sharding import BATCH, maybe_constrain
+from repro.models.layers import (Params, activation_fn, dense, init_dense,
+                                 make_param)
+
+
+class MoEOut(NamedTuple):
+    y: jax.Array
+    aux_loss: jax.Array
+
+
+def init_moe(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    e: MoEConfig = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": make_param(ks[0], (d, e.n_experts), ("embed", "expert"),
+                             jnp.float32),
+        # stacked experts: [E, d, ff] / [E, ff, d]
+        "w_gate": make_param(ks[1], (e.n_experts, d, e.d_ff_expert),
+                             ("expert", "embed", "mlp"), dtype),
+        "w_up": make_param(ks[2], (e.n_experts, d, e.d_ff_expert),
+                           ("expert", "embed", "mlp"), dtype),
+        "w_down": make_param(ks[3], (e.n_experts, e.d_ff_expert, d),
+                             ("expert", "mlp", "embed"), dtype),
+    }
+    if e.n_shared_experts:
+        ff = (e.d_ff_shared or e.d_ff_expert) * e.n_shared_experts
+        kg, ku, kd = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "gate": init_dense(kg, d, ff, ("embed", "mlp"), dtype),
+            "up": init_dense(ku, d, ff, ("embed", "mlp"), dtype),
+            "down": init_dense(kd, ff, d, ("mlp", "embed"), dtype),
+        }
+    return p
+
+
+def _topk_route(logits: jax.Array, e: MoEConfig
+                ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """logits [T, E] -> (weights [T,k], ids [T,k], aux_loss)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    w, ids = jax.lax.top_k(probs, e.top_k)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)     # renormalize
+    # Switch-style load-balance loss: E * sum_e f_e * P_e
+    T = logits.shape[0]
+    counts = jnp.zeros((e.n_experts,), jnp.float32).at[ids.reshape(-1)].add(1.0)
+    f = counts / (T * e.top_k)
+    P = probs.mean(axis=0)
+    aux = e.n_experts * jnp.sum(f * P) * e.aux_loss_weight
+    return w.astype(jnp.float32), ids, aux
+
+
+def _expert_ranks(flat_ids: jax.Array, n_experts: int) -> jax.Array:
+    """rank[i] = #earlier slots routed to the same expert as slot i."""
+    n = flat_ids.shape[0]
+    order = jnp.argsort(flat_ids, stable=True)
+    counts = jnp.zeros((n_experts,), jnp.int32).at[flat_ids].add(1)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(counts)[:-1]])
+    ranks_sorted = jnp.arange(n, dtype=jnp.int32) - starts[flat_ids[order]]
+    return jnp.zeros((n,), jnp.int32).at[order].set(ranks_sorted)
+
+
+def moe_forward(params: Params, x: jax.Array, cfg: ModelConfig,
+                capacity: Optional[int] = None) -> MoEOut:
+    """x: [B, S, D] -> MoEOut. Sort-based dispatch, capacity-dropped."""
+    e = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    xt = maybe_constrain(x.reshape(T, D), BATCH)
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                        params["router"].value)
+    w, ids, aux = _topk_route(logits, e)
+
+    k = e.top_k
+    C = capacity or max(1, -(-int(e.capacity_factor * T * k) // e.n_experts))
+    flat_ids = ids.reshape(-1)                                  # [T*k]
+    ranks = _expert_ranks(flat_ids, e.n_experts)
+    keep = ranks < C
+    dest = jnp.where(keep, flat_ids * C + ranks, e.n_experts * C)
+
+    # scatter token rows into per-expert buffers (+1 overflow row)
+    rows = jnp.repeat(xt, k, axis=0)                            # [T*k, D]
+    buf = jnp.zeros((e.n_experts * C + 1, D), xt.dtype).at[dest].add(rows)
+    h = maybe_constrain(
+        buf[:e.n_experts * C].reshape(e.n_experts, C, D), "model")
+
+    # batched expert FFN (always gated-silu in the assigned MoE archs)
+    act = activation_fn("silu")
+    g = jnp.einsum("ecd,edf->ecf", h, params["w_gate"].value)
+    u = jnp.einsum("ecd,edf->ecf", h, params["w_up"].value)
+    out = jnp.einsum("ecf,efd->ecd", act(g) * u, params["w_down"].value)
+
+    # gather back and combine with routing weights (dropped -> 0).
+    # The [T,k,D] intermediate stays in the input dtype; the weighted
+    # k-reduction accumulates in fp32 without materializing fp32 [T,k,D].
+    out_rows = out.reshape(e.n_experts * C, D)
+    slot_out = jnp.where(keep[:, None],
+                         out_rows[jnp.minimum(dest, e.n_experts * C - 1)],
+                         0.0)
+    wk = (w.reshape(T, k) * keep.reshape(T, k)).astype(jnp.float32)
+    y = jnp.einsum("tkd,tk->td", slot_out.reshape(T, k, D), wk,
+                   preferred_element_type=jnp.float32)
+    y = y * e.routed_scaling
+
+    if "shared" in params:
+        sh = params["shared"]
+        hs = act(dense(sh["gate"], xt)) * dense(sh["up"], xt)
+        y = y + dense(sh["down"], hs).astype(jnp.float32)
+    return MoEOut(y.astype(x.dtype).reshape(B, S, D), aux)

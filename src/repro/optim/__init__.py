@@ -1,0 +1,8 @@
+"""Optimizers, schedules, gradient clipping (pure-JAX, Param-tree aware)."""
+from repro.optim.optimizers import (OptState, adafactor_init, adamw_init,
+                                    clip_by_global_norm, make_optimizer,
+                                    sgd_init)
+from repro.optim.schedules import warmup_cosine
+
+__all__ = ["OptState", "adamw_init", "sgd_init", "adafactor_init",
+           "make_optimizer", "clip_by_global_norm", "warmup_cosine"]

@@ -1,0 +1,183 @@
+"""Optimizers over Param trees.
+
+Optimizer state mirrors the parameter tree leaf-for-leaf (so the same
+logical-axis sharding rules apply to it — this is what makes ZeRO-style
+optimizer-state sharding fall out for free: ``m``/``v`` inherit each
+param's PartitionSpec).
+
+``adafactor`` keeps factored second moments for matrices (row/col vectors)
+— the memory-frugal choice for >100B-param models (see DESIGN.md §9).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+from repro.models.layers import Param, is_param
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Any          # first moment (or momentum); tree or None
+    nu: Any          # second moment; tree / factored tuple tree / None
+
+
+def _zeros_like_tree(params, dtype):
+    return jax.tree.map(
+        lambda p: Param(jnp.zeros(p.value.shape, dtype), p.axes),
+        params, is_leaf=is_param)
+
+
+def _val(g):
+    return g.value if is_param(g) else g
+
+
+def tree_global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(grads_values, max_norm: float):
+    norm = tree_global_norm(grads_values)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads_values), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_init(params, tcfg: TrainConfig) -> OptState:
+    dt = jnp.dtype(tcfg.opt_state_dtype)
+    return OptState(jnp.zeros((), jnp.int32),
+                    _zeros_like_tree(params, dt), _zeros_like_tree(params, dt))
+
+
+def adamw_update(params, grads_values, state: OptState, tcfg: TrainConfig,
+                 lr) -> Tuple[Any, OptState]:
+    b1, b2, eps, wd = tcfg.beta1, tcfg.beta2, tcfg.eps, tcfg.weight_decay
+    step = state.step + 1
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p: Param, g, m: Param, v: Param):
+        gf = _val(g).astype(jnp.float32)
+        m_new = b1 * m.value.astype(jnp.float32) + (1 - b1) * gf
+        v_new = b2 * v.value.astype(jnp.float32) + (1 - b2) * gf * gf
+        update = (m_new / c1) / (jnp.sqrt(v_new / c2) + eps)
+        update = update + wd * p.value.astype(jnp.float32)
+        new_p = p.value.astype(jnp.float32) - lr * update
+        return (Param(new_p.astype(p.value.dtype), p.axes),
+                Param(m_new.astype(m.value.dtype), m.axes),
+                Param(v_new.astype(v.value.dtype), v.axes))
+
+    out = jax.tree.map(upd, params, grads_values, state.mu, state.nu,
+                       is_leaf=is_param)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple)
+                              and len(x) == 3 and is_param(x[0]))
+    new_mu = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple)
+                          and len(x) == 3 and is_param(x[0]))
+    new_nu = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple)
+                          and len(x) == 3 and is_param(x[0]))
+    return new_params, OptState(step, new_mu, new_nu)
+
+
+# ---------------------------------------------------------------------------
+# SGD (momentum)
+# ---------------------------------------------------------------------------
+
+def sgd_init(params, tcfg: TrainConfig) -> OptState:
+    dt = jnp.dtype(tcfg.opt_state_dtype)
+    return OptState(jnp.zeros((), jnp.int32),
+                    _zeros_like_tree(params, dt), None)
+
+
+def sgd_update(params, grads_values, state: OptState, tcfg: TrainConfig, lr):
+    b1 = tcfg.beta1
+
+    def upd(p: Param, g, m: Param):
+        gf = _val(g).astype(jnp.float32) + tcfg.weight_decay * \
+            p.value.astype(jnp.float32)
+        m_new = b1 * m.value.astype(jnp.float32) + gf
+        new_p = p.value.astype(jnp.float32) - lr * m_new
+        return (Param(new_p.astype(p.value.dtype), p.axes),
+                Param(m_new.astype(m.value.dtype), m.axes))
+
+    out = jax.tree.map(upd, params, grads_values, state.mu, is_leaf=is_param)
+    is2 = lambda x: isinstance(x, tuple) and len(x) == 2 and is_param(x[0])
+    return (jax.tree.map(lambda t: t[0], out, is_leaf=is2),
+            OptState(state.step + 1,
+                     jax.tree.map(lambda t: t[1], out, is_leaf=is2), None))
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment; for ≥100B runs)
+# ---------------------------------------------------------------------------
+
+def adafactor_init(params, tcfg: TrainConfig) -> OptState:
+    def fac(p: Param):
+        s = p.value.shape
+        if len(s) >= 2:
+            row = Param(jnp.zeros(s[:-1], jnp.float32), p.axes[:-1])
+            col = Param(jnp.zeros(s[:-2] + s[-1:], jnp.float32),
+                        p.axes[:-2] + p.axes[-1:])
+            return (row, col)
+        return (Param(jnp.zeros(s, jnp.float32), p.axes),)
+
+    nu = jax.tree.map(fac, params, is_leaf=is_param)
+    return OptState(jnp.zeros((), jnp.int32), None, nu)
+
+
+def adafactor_update(params, grads_values, state: OptState,
+                     tcfg: TrainConfig, lr):
+    eps = 1e-30
+    step = state.step + 1
+    decay = 1.0 - step.astype(jnp.float32) ** -0.8
+
+    def upd(p: Param, g, nu):
+        gf = _val(g).astype(jnp.float32)
+        g2 = gf * gf + eps
+        if len(p.value.shape) >= 2:
+            row, col = nu
+            r = decay * row.value + (1 - decay) * g2.mean(axis=-1)
+            c = decay * col.value + (1 - decay) * g2.mean(axis=-2)
+            rc = r / jnp.maximum(r.mean(axis=-1, keepdims=True), eps)
+            v = rc[..., None] * c[..., None, :]
+            new_nu = (Param(r, row.axes), Param(c, col.axes))
+        else:
+            (full,) = nu
+            v = decay * full.value + (1 - decay) * g2
+            new_nu = (Param(v, full.axes),)
+        update = gf / jnp.sqrt(jnp.maximum(v, eps))
+        # update clipping (RMS <= 1)
+        rms = jnp.sqrt(jnp.mean(jnp.square(update)) + 1e-12)
+        update = update / jnp.maximum(1.0, rms)
+        update = update + tcfg.weight_decay * p.value.astype(jnp.float32)
+        new_p = p.value.astype(jnp.float32) - lr * update
+        return (Param(new_p.astype(p.value.dtype), p.axes), new_nu)
+
+    isp = is_param
+    out = jax.tree.map(upd, params, grads_values, state.nu, is_leaf=isp)
+    is2 = lambda x: isinstance(x, tuple) and len(x) == 2 and is_param(x[0])
+    return (jax.tree.map(lambda t: t[0], out, is_leaf=is2),
+            OptState(step, None,
+                     jax.tree.map(lambda t: t[1], out, is_leaf=is2)))
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+def make_optimizer(name: str) -> Tuple[Callable, Callable]:
+    return {"adamw": (adamw_init, adamw_update),
+            "sgd": (sgd_init, sgd_update),
+            "adafactor": (adafactor_init, adafactor_update)}[name]

@@ -1,0 +1,1 @@
+"""Performance measurement substrate: timers, sweeps, roofline extraction."""

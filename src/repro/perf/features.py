@@ -1,0 +1,28 @@
+"""Feature spec for the paper's LeNet-5 experiment (Table 1)."""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs.lenet5 import (ACTIVATIONS, BATCH_SIZES, DATASETS,
+                                  DROPOUTS, KERNEL_SIZES, LEARNING_RATES,
+                                  LeNet5Config, N_DEVICES, N_FILTERS,
+                                  OPTIMIZERS, PADDING_MODES, POOL_SIZES,
+                                  STRIDES)
+from repro.core.generic_model import FeatureSpec
+
+# Table 1, split per the paper's treatment: numeric intrinsics get power
+# terms; categorical intrinsics get per-value constants; the "framework"
+# axis of the paper maps to our execution-mode axis (see DESIGN.md §5).
+LENET_SPEC = FeatureSpec(
+    numeric=("kernel_size", "pool_size", "n_filters", "learning_rate",
+             "stride", "dropout"),
+    categorical=(("activation", ACTIVATIONS),
+                 ("optimizer", OPTIMIZERS),
+                 ("dataset", DATASETS),
+                 ("padding", PADDING_MODES)),
+    extrinsic=("n_devices", "batch_size"),
+)
+
+
+def lenet_features(cfg: LeNet5Config) -> Dict:
+    return {**cfg.intrinsic_dict(), **cfg.extrinsic_dict()}

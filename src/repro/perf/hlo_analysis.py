@@ -1,0 +1,246 @@
+"""Honest whole-program cost analysis from optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body **once**, so any
+scan-over-layers program (ours — by design, for compile-time) is
+undercounted by ~n_layers. This module re-derives FLOPs / HBM-traffic /
+collective-traffic from the HLO text itself, multiplying loop bodies by
+their ``known_trip_count`` backend annotation (present on all lowered
+``lax.scan`` loops), recursively through nested loops, fusions and calls.
+
+Accounting rules:
+  * FLOPs: dots only (2·out_elems·K); elementwise flops are ignored (they
+    are bandwidth-, not MXU-, relevant). Dots inside fused computations are
+    counted (descend into ``calls=``).
+  * HBM bytes: per top-level op in each computation, output bytes + operand
+    bytes (a standard traffic proxy; intra-fusion temporaries excluded —
+    matches what a fused TPU kernel actually writes/reads). Pure
+    plumbing ops (tuple/gte/parameter/bitcast/constant/copy-start...) are
+    skipped as ops but still appear as operands of real ops.
+  * Collectives: operand-shape bytes with ring coefficients (all-reduce
+    2·b; gather/scatter/a2a/permute 1·b), × enclosing trip counts.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(pred|bf16|f8e4m3fn|f8e5m2|[sufc]\d+)\[([\d,]*)\]")
+
+_SKIP_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "copy-start", "copy-done", "partition-id", "replica-id",
+    "opt-barrier",
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shapes_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.groups()
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_shape(shape_str: str) -> Optional[Tuple[str, List[int]]]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return None
+    dt, dims = m.groups()
+    return dt, [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclass
+class OpLine:
+    name: str
+    out_shape_str: str
+    op: str
+    operands: List[str]
+    attrs: str
+
+
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^()]*\)|\S+))\s+"
+    r"([\w\-]+)\((.*?)\)(.*)$")
+
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_LHS_C_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_LHS_B_RE = re.compile(r"lhs_batch_dims=\{([\d,]*)\}")
+
+
+@dataclass
+class CompStats:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_counts: Dict[str, float] = field(default_factory=dict)
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.computations: Dict[str, List[OpLine]] = {}
+        self.entry: Optional[str] = None
+        self._parse(hlo_text)
+        self._memo: Dict[str, CompStats] = {}
+
+    # -- parsing -------------------------------------------------------------
+    def _parse(self, text: str):
+        cur: Optional[str] = None
+        # a computation header contains "(...) -> type {" on one line
+        header_re = re.compile(
+            r"^\s*(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            if not line:
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            m = header_re.match(line)
+            if m and "=" not in line.split("(")[0]:
+                cur = m.group(2)
+                self.computations[cur] = []
+                if m.group(1):
+                    self.entry = cur
+                continue
+            if cur is None:
+                continue
+            m = _OP_RE.match(line)
+            if m:
+                name, shape_str, op, operands, attrs = m.groups()
+                self.computations[cur].append(
+                    OpLine(name, shape_str, op,
+                           _OPERAND_RE.findall(operands), attrs))
+        if self.entry is None and self.computations:
+            # entry is the last computation in canonical dumps
+            self.entry = list(self.computations)[-1]
+
+    # -- per-computation symbol table ---------------------------------------
+    def _symbols(self, comp: str) -> Dict[str, str]:
+        return {op.name: op.out_shape_str for op in self.computations[comp]}
+
+    # -- cost ------------------------------------------------------------------
+    def stats(self, comp: Optional[str] = None) -> CompStats:
+        comp = comp or self.entry
+        if comp in self._memo:
+            return self._memo[comp]
+        total = CompStats()
+        self._memo[comp] = total          # cycle guard
+        syms = self._symbols(comp)
+        for op in self.computations.get(comp, []):
+            trip = 1.0
+            sub: List[str] = []
+            if op.op == "while":
+                m = _TRIP_RE.search(op.attrs)
+                trip = float(m.group(1)) if m else 1.0
+                for rex in (_BODY_RE, _COND_RE):
+                    mm = rex.search(op.attrs)
+                    if mm:
+                        sub.append(mm.group(1))
+            elif op.op in ("fusion", "call", "conditional", "map",
+                           "reduce", "reduce-window", "sort", "scatter",
+                           "select-and-scatter", "custom-call"):
+                for rex in (_CALLS_RE, _TO_APPLY_RE):
+                    mm = rex.search(op.attrs)
+                    if mm:
+                        sub.append(mm.group(1))
+                # conditional: branch computations listed in operands attr
+                for mm in re.finditer(r"branch_computations=\{([^}]*)\}",
+                                      op.attrs):
+                    sub += [s.strip().lstrip("%")
+                            for s in mm.group(1).split(",")]
+
+            for s in sub:
+                if s in self.computations:
+                    st = self.stats(s)
+                    total.flops += trip * st.flops
+                    total.bytes += trip * st.bytes if op.op == "while" \
+                        else 0.0     # fusion internals don't touch HBM
+                    total.coll_bytes += trip * st.coll_bytes
+                    for k, v in st.coll_counts.items():
+                        total.coll_counts[k] = \
+                            total.coll_counts.get(k, 0) + trip * v
+
+            if op.op == "dot":
+                total.flops += self._dot_flops(op, syms)
+            if op.op.startswith("convolution"):
+                total.flops += self._conv_flops(op, syms)
+
+            base = op.op.split("-start")[0]
+            if base in _COLLECTIVES and not op.op.endswith("-done"):
+                ob = self._operand_bytes_int(op, syms)
+                outb = _shapes_bytes(op.out_shape_str)
+                size = max(ob, outb)
+                coef = 2.0 if base == "all-reduce" else 1.0
+                total.coll_bytes += coef * size
+                total.coll_counts[base] = total.coll_counts.get(base, 0) + 1
+
+            if op.op not in _SKIP_OPS and not op.op.endswith("-done"):
+                outb = _shapes_bytes(op.out_shape_str)
+                inb = self._operand_bytes_int(op, syms)
+                total.bytes += outb + inb
+        self._memo[comp] = total
+        return total
+
+    def _operand_bytes_int(self, op: OpLine, syms: Dict[str, str]) -> int:
+        return sum(_shapes_bytes(syms.get(o, "")) for o in op.operands)
+
+    def _operand_bytes(self, op: OpLine, syms) -> str:
+        return " ".join(syms.get(o, "") for o in op.operands)
+
+    def _dot_flops(self, op: OpLine, syms: Dict[str, str]) -> float:
+        out = _first_shape(op.out_shape_str)
+        if out is None:
+            return 0.0
+        out_elems = 1
+        for d in out[1]:
+            out_elems *= d
+        lhs_shape = None
+        if op.operands:
+            lhs_shape = _first_shape(syms.get(op.operands[0], ""))
+        k = 1
+        m = _LHS_C_RE.search(op.attrs)
+        if m and lhs_shape and m.group(1):
+            for idx in m.group(1).split(","):
+                i = int(idx)
+                if i < len(lhs_shape[1]):
+                    k *= lhs_shape[1][i]
+        return 2.0 * out_elems * k
+
+    def _conv_flops(self, op: OpLine, syms: Dict[str, str]) -> float:
+        # rough: 2 * out_elems * kernel_elems (enough for LeNet-scale use)
+        out = _first_shape(op.out_shape_str)
+        if out is None or len(op.operands) < 2:
+            return 0.0
+        out_elems = 1
+        for d in out[1]:
+            out_elems *= d
+        ker = _first_shape(syms.get(op.operands[1], ""))
+        k_elems = 1
+        if ker:
+            for d in ker[1]:
+                k_elems *= d
+        return 2.0 * out_elems * k_elems
+
+
+def analyze_hlo(hlo_text: str) -> CompStats:
+    return HloCostModel(hlo_text).stats()

@@ -1,0 +1,166 @@
+"""Roofline-term extraction from compiled XLA artifacts.
+
+Hardware model (TPU v5e, per chip):
+  peak bf16 compute : 197 TFLOP/s
+  HBM bandwidth     : 819 GB/s
+  ICI link bandwidth: ~50 GB/s (per-chip egress budget; conservative)
+
+Terms, per §Roofline of the assignment:
+  compute   = HLO_FLOPs / (chips · PEAK_FLOPS)
+  memory    = HLO_bytes / (chips · HBM_BW)
+  collective= Σ per-chip collective traffic / LINK_BW
+
+``cost_analysis()`` reports whole-program FLOPs / bytes for the
+*per-device* SPMD module, so terms are divided by chips only when the
+analysis is whole-program (CPU backend reports per-module = per-device
+already; we treat cost_analysis output as per-device and don't divide —
+see ``roofline_from_compiled``).
+
+Collective traffic is not in cost_analysis: we parse the optimized HLO
+text. In SPMD-partitioned HLO the instruction shapes are per-device
+buffer shapes; ring-style cost coefficients: all-reduce 2·b, all-gather /
+reduce-scatter / all-to-all / collective-permute 1·b.
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per chip (ICI egress)
+DCN_BW = 6.25e9              # bytes/s per chip across pods (50 Gbit/s)
+HBM_PER_CHIP = 16e9          # v5e capacity
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+# e.g.  "bf16[256,4096,960]{2,1,0}"  (also matches tuple members)
+_SHAPE_RE = re.compile(r"(pred|[suf]\d+|bf16|c64|c128)\[([\d,]*)\]")
+
+_COLLECTIVE_RE = re.compile(
+    r"^\s*(?:%|ROOT\s+%?)?\S*\s*=\s*(.*?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.M)
+
+_REPLICA_GROUPS_RE = re.compile(r"replica_groups=\{?\{([^}]*)\}")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of all array shapes in a shape string (handles tuples)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.groups()
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    counts: Dict[str, int] = field(default_factory=dict)
+    bytes_by_kind: Dict[str, float] = field(default_factory=dict)
+    total_per_chip_bytes: float = 0.0
+    ops: List[Tuple[str, float]] = field(default_factory=list)
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum per-chip collective traffic from (SPMD-partitioned) HLO text."""
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = re.search(
+            r"=\s*(\([^)]*\)|\S+)\s+"
+            r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
+            r"collective-permute)(-start|-done)?\(", line)
+        if not m:
+            continue
+        if m.group(3) == "-done":
+            continue                      # counted at -start
+        shape_str, kind = m.group(1), m.group(2)
+        b = _shape_bytes(shape_str)
+        if b == 0:
+            continue
+        coef = 2.0 if kind == "all-reduce" else 1.0
+        traffic = coef * b
+        stats.counts[kind] = stats.counts.get(kind, 0) + 1
+        stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(kind, 0.0) + traffic
+        stats.total_per_chip_bytes += traffic
+        stats.ops.append((kind, traffic))
+    return stats
+
+
+@dataclass
+class Roofline:
+    flops: float                  # per-device HLO FLOPs
+    hbm_bytes: float              # per-device bytes accessed
+    collective_bytes: float       # per-chip collective traffic
+    n_chips: int
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    model_flops: float = 0.0      # 6·N·D (useful flops, whole step, global)
+    bottleneck: str = ""
+    t_step: float = 0.0
+    useful_fraction: float = 0.0  # model_flop_time / t_step
+
+    def finalize(self) -> "Roofline":
+        self.compute_s = self.flops / PEAK_FLOPS
+        self.memory_s = self.hbm_bytes / HBM_BW
+        self.collective_s = self.collective_bytes / LINK_BW
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        self.bottleneck = max(terms, key=terms.get)
+        self.t_step = max(terms.values())
+        if self.model_flops and self.t_step > 0:
+            useful_s = (self.model_flops / self.n_chips) / PEAK_FLOPS
+            self.useful_fraction = useful_s / self.t_step
+        return self
+
+    def to_dict(self) -> dict:
+        return {k: getattr(self, k) for k in (
+            "flops", "hbm_bytes", "collective_bytes", "n_chips", "compute_s",
+            "memory_s", "collective_s", "bottleneck", "t_step",
+            "model_flops", "useful_fraction")}
+
+
+def roofline_from_compiled(compiled, n_chips: int,
+                           model_flops: float = 0.0,
+                           hlo_text: Optional[str] = None) -> Roofline:
+    """Build Roofline terms from a compiled executable.
+
+    Costs come from ``repro.perf.hlo_analysis`` — a whole-program walk of
+    the optimized (SPMD-partitioned, hence per-device) HLO that multiplies
+    ``while`` bodies by their known trip counts. XLA's built-in
+    ``cost_analysis()`` counts loop bodies once, which undercounts any
+    scan-over-layers program by ~n_layers (see EXPERIMENTS.md §3 note).
+    """
+    from repro.perf.hlo_analysis import analyze_hlo
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    st = analyze_hlo(text)
+    return Roofline(flops=st.flops, hbm_bytes=st.bytes,
+                    collective_bytes=st.coll_bytes,
+                    n_chips=n_chips, model_flops=model_flops).finalize()
+
+
+def model_flops_for(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE), whole step.
+
+    For decode shapes D = global_batch tokens (one token per sequence);
+    for train/prefill D = global_batch · seq_len. Serving (no backward)
+    uses 2·N·D instead of 6·N·D."""
+    n_active = cfg.param_count(active_only=True)
+    if shape.mode == "train":
+        d_tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * d_tokens
+    if shape.mode == "prefill":
+        d_tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * d_tokens
+    return 2.0 * n_active * shape.global_batch          # decode: 1 tok/seq

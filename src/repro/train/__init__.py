@@ -1,0 +1,6 @@
+"""Training/serving substrate: steps, checkpointing, fault tolerance."""
+from repro.train.step import TrainState, init_train_state, make_train_step
+from repro.train.serve import make_decode_step, make_prefill
+
+__all__ = ["TrainState", "init_train_state", "make_train_step",
+           "make_prefill", "make_decode_step"]

@@ -1,0 +1,147 @@
+"""Fault-tolerant checkpointing: atomic, versioned, async, auto-resume.
+
+Format: one ``.npz`` per checkpoint (flattened key-path → array) plus a
+JSON sidecar with step/config metadata. Writes go to a temp file followed
+by ``os.replace`` (atomic on POSIX), so a crash mid-write can never
+corrupt the latest checkpoint. A background thread does the serialization;
+``wait()`` joins it (called before shutdown and before the next save).
+
+Restore scans for the newest *complete* checkpoint (sidecar present and
+readable) — partially-written stragglers are skipped and garbage-collected.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.models.layers import Param, is_param
+
+_CKPT_RE = re.compile(r"ckpt_(\d+)\.npz$")
+
+
+def _flatten_with_paths(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "V" or arr.dtype.name == "bfloat16":
+            # npz can't round-trip ml_dtypes; fp32 upcast is lossless
+            arr = arr.astype(np.float32)
+        flat[key] = arr
+    return flat
+
+
+def _unflatten_like(skeleton, flat: Dict[str, np.ndarray]):
+    paths_and_leaves, treedef = jax.tree_util.tree_flatten_with_path(skeleton)
+    leaves = []
+    for path, leaf in paths_and_leaves:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = flat[key]
+        want = np.asarray(leaf)
+        if tuple(arr.shape) != tuple(want.shape):
+            raise ValueError(f"{key}: checkpoint shape {arr.shape} != "
+                             f"state shape {want.shape}")
+        import jax.numpy as jnp
+        leaves.append(jnp.asarray(arr).astype(want.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_write=True):
+        self.dir = directory
+        self.keep = keep
+        self.async_write = async_write
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, state, extra_meta: Optional[dict] = None):
+        self.wait()
+        flat = _flatten_with_paths(state)      # host copy happens here
+        meta = {"step": int(step), "time": time.time(),
+                **(extra_meta or {})}
+
+        def _write():
+            tmp = os.path.join(self.dir, f".tmp_ckpt_{step}.npz")
+            dst = os.path.join(self.dir, f"ckpt_{step}.npz")
+            with open(tmp, "wb") as f:
+                np.savez(f, **flat)
+            os.replace(tmp, dst)
+            with open(dst + ".json.tmp", "w") as f:
+                json.dump(meta, f)
+            os.replace(dst + ".json.tmp", dst + ".json")
+            self._gc()
+
+        if self.async_write:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+        else:
+            _write()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # -- restore --------------------------------------------------------------
+    def available_steps(self) -> List[int]:
+        steps = []
+        for name in os.listdir(self.dir):
+            m = _CKPT_RE.match(name)
+            if m and os.path.exists(os.path.join(self.dir, name + ".json")):
+                steps.append(int(m.group(1)))
+        return sorted(steps)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.available_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, skeleton, step: Optional[int] = None
+                ) -> Tuple[Any, int]:
+        """Restore into the structure of ``skeleton``. Returns (state, step).
+        Tries newest-first; skips corrupt files (fault tolerance)."""
+        self.wait()
+        steps = self.available_steps()
+        if step is not None:
+            steps = [s for s in steps if s == step]
+        last_err: Optional[Exception] = None
+        for s in reversed(steps):
+            path = os.path.join(self.dir, f"ckpt_{s}.npz")
+            try:
+                with np.load(path) as z:
+                    flat = {k: z[k] for k in z.files}
+                return _unflatten_like(skeleton, flat), s
+            except Exception as e:        # corrupt/partial -> try older
+                last_err = e
+                continue
+        if last_err is not None:
+            raise last_err
+        raise FileNotFoundError(f"no checkpoint in {self.dir}")
+
+    # -- gc -------------------------------------------------------------------
+    def _gc(self):
+        steps = self.available_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            for suffix in (".npz", ".npz.json"):
+                try:
+                    os.remove(os.path.join(self.dir, f"ckpt_{s}{suffix}"))
+                except OSError:
+                    pass
+        # orphan temp files
+        for name in os.listdir(self.dir):
+            if name.startswith(".tmp_ckpt_"):
+                try:
+                    os.remove(os.path.join(self.dir, name))
+                except OSError:
+                    pass

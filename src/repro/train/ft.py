@@ -1,0 +1,96 @@
+"""Fault tolerance: straggler detection + elastic re-mesh planning.
+
+The straggler detector is where the paper's performance model becomes a
+*runtime* feature: the fitted generic expression predicts the expected
+step time for the current (arch, shape, mesh) configuration; a measured
+step exceeding ``tolerance × prediction`` flags a straggler. Before a
+model is fitted (or if prediction is unavailable) the detector falls back
+to a robust running median × tolerance rule.
+
+The elastic planner chooses a replacement mesh when devices are lost:
+it keeps the model axis as large as memory requires and gives the rest
+to data parallelism, preferring shapes whose *predicted* step time (via
+the same performance model) is smallest.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Sequence, Tuple
+
+
+@dataclass
+class StragglerDetector:
+    tolerance: float = 1.5           # flag if measured > tol * expected
+    window: int = 32                 # running-median window
+    predict_s: Optional[Callable[[], float]] = None   # perf-model hook
+    history: List[float] = field(default_factory=list)
+    flags: List[int] = field(default_factory=list)
+
+    def expected(self) -> Optional[float]:
+        if self.predict_s is not None:
+            try:
+                p = float(self.predict_s())
+                if math.isfinite(p) and p > 0:
+                    return p
+            except Exception:
+                pass
+        if len(self.history) >= 5:
+            h = sorted(self.history[-self.window:])
+            return h[len(h) // 2]
+        return None
+
+    def observe(self, step: int, seconds: float) -> bool:
+        exp = self.expected()
+        is_straggler = exp is not None and seconds > self.tolerance * exp
+        self.history.append(seconds)
+        if is_straggler:
+            self.flags.append(step)
+        return is_straggler
+
+
+def _factorizations(n: int) -> List[Tuple[int, int]]:
+    out = []
+    d = 1
+    while d * d <= n:
+        if n % d == 0:
+            out.append((d, n // d))
+            if d != n // d:
+                out.append((n // d, d))
+        d += 1
+    return sorted(out)
+
+
+@dataclass
+class ElasticPlan:
+    mesh_shape: Tuple[int, ...]
+    axis_names: Tuple[str, ...]
+    reason: str
+
+
+def plan_remesh(n_devices: int, *, min_model: int = 1,
+                max_model: Optional[int] = None,
+                predict: Optional[Callable[[int, int], float]] = None,
+                prefer_pow2: bool = True) -> ElasticPlan:
+    """Choose (data, model) for a shrunk/grown device set.
+
+    ``min_model`` encodes the memory floor (model params must fit:
+    model_axis ≥ ceil(param_bytes / HBM_per_chip / data_shardable));
+    ``predict(data, model) -> seconds`` ranks feasible shapes (the fitted
+    performance model is plugged in here). Deterministic fallback: the
+    most-square factorization with model ≥ min_model.
+    """
+    if prefer_pow2 and n_devices > 1:
+        n_devices = 2 ** int(math.floor(math.log2(n_devices)))
+    cands = [(d, m) for d, m in _factorizations(n_devices)
+             if m >= min_model and (max_model is None or m <= max_model)]
+    if not cands:
+        cands = [(1, n_devices)]
+    if predict is not None:
+        best = min(cands, key=lambda dm: predict(dm[0], dm[1]))
+        reason = "perf-model ranked"
+    else:
+        best = min(cands, key=lambda dm: abs(math.log2(max(dm[0], 1))
+                                             - math.log2(max(dm[1], 1))))
+        reason = "most-square fallback"
+    return ElasticPlan(best, ("data", "model"), reason)

@@ -1,0 +1,51 @@
+"""Serving steps: batched prefill + decode with ring-buffer KV caches."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as MD
+
+
+def make_prefill(cfg: ModelConfig):
+    def prefill(params, batch):
+        logits, caches, enc_kv = MD.prefill(params, cfg, batch)
+        return logits, caches, enc_kv
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode(params, caches, token, pos, enc_kv=None):
+        return MD.decode_step(params, cfg, caches, token, pos, enc_kv=enc_kv)
+    return decode
+
+
+def greedy_generate(params, cfg: ModelConfig, prompt: jax.Array,
+                    n_steps: int, seq_cap: Optional[int] = None,
+                    batch_extras: Optional[Dict[str, jax.Array]] = None):
+    """Reference generation loop (prefill + greedy decode), CPU-friendly."""
+    B, S = prompt.shape
+    cap = seq_cap or (S + n_steps)
+    caches = MD.init_decode_caches(cfg, B, cap)
+    batch = {"tokens": prompt}
+    if batch_extras:
+        batch.update(batch_extras)
+    enc_kv = None
+    if cfg.is_encoder_decoder:
+        enc_out = MD.encoder_forward(params, cfg, batch["frames"])
+        enc_kv = MD._stacked_cross_kv(params, cfg, enc_out)
+    # feed prompt through decode steps (keeps a single compiled path)
+    logits = None
+    for pos in range(S):
+        logits, caches = MD.decode_step(params, cfg, caches,
+                                        prompt[:, pos:pos + 1], pos,
+                                        enc_kv=enc_kv)
+    out = [jnp.argmax(logits, axis=-1)[:, None]]
+    for i in range(n_steps - 1):
+        logits, caches = MD.decode_step(params, cfg, caches, out[-1], S + i,
+                                        enc_kv=enc_kv)
+        out.append(jnp.argmax(logits, axis=-1)[:, None])
+    return jnp.concatenate(out, axis=1)

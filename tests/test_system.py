@@ -1,0 +1,162 @@
+"""End-to-end system tests: training drivers, restart continuation,
+dry-run integration (subprocess with a placeholder device pool)."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(args, env_extra=None, timeout=900):
+    env = {**os.environ, "PYTHONPATH": SRC, **(env_extra or {})}
+    return subprocess.run([sys.executable] + args, capture_output=True,
+                          text=True, env=env, timeout=timeout)
+
+
+def test_training_loss_decreases():
+    """Train a tiny LM for 60 steps; loss must drop measurably."""
+    from repro.configs import TrainConfig, get_config, reduced
+    from repro.data import make_batch_for
+    from repro.train import init_train_state, make_train_step
+    cfg = reduced(get_config("smollm-360m"))
+    tcfg = TrainConfig(learning_rate=1e-3, optimizer="adamw",
+                       total_steps=60, warmup_steps=6, remat_policy="none")
+    state = init_train_state(jax.random.PRNGKey(0), cfg, tcfg)
+    step = jax.jit(make_train_step(cfg, tcfg), donate_argnums=(0,))
+    losses = []
+    for i in range(60):
+        state, m = step(state, make_batch_for(cfg, 8, 64, step=i))
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-10:]) < np.mean(losses[:10]) - 0.5, (
+        losses[:5], losses[-5:])
+
+
+def test_restart_continuation_is_exact():
+    """Fault tolerance: crash at step 12, auto-resume, and the final state
+    must match an uninterrupted run bitwise (deterministic data + donation).
+    """
+    from repro.configs import TrainConfig, get_config, reduced
+    from repro.data import make_batch_for
+    from repro.train import init_train_state, make_train_step
+    from repro.train.checkpoint import CheckpointManager
+    import tempfile
+
+    cfg = reduced(get_config("smollm-360m"), n_layers=1, d_model=32,
+                  vocab=128, d_ff=64)
+    tcfg = TrainConfig(learning_rate=1e-3, optimizer="adamw",
+                       total_steps=20, warmup_steps=2, remat_policy="none")
+
+    def run(n_from, n_to, state):
+        step = jax.jit(make_train_step(cfg, tcfg))
+        for i in range(n_from, n_to):
+            state, m = step(state, make_batch_for(cfg, 4, 32, step=i))
+        return state
+
+    # uninterrupted
+    s_ref = run(0, 20, init_train_state(jax.random.PRNGKey(0), cfg, tcfg))
+
+    # interrupted at 12 + checkpoint/restore roundtrip
+    with tempfile.TemporaryDirectory() as d:
+        cm = CheckpointManager(d, async_write=False)
+        s = run(0, 12, init_train_state(jax.random.PRNGKey(0), cfg, tcfg))
+        cm.save(12, s)
+        skel = init_train_state(jax.random.PRNGKey(0), cfg, tcfg)
+        s2, start = cm.restore(skel)
+        assert start == 12
+        s_resumed = run(12, 20, s2)
+
+    for a, b in zip(jax.tree.leaves(s_ref), jax.tree.leaves(s_resumed)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_train_driver_cli():
+    r = _run(["-m", "repro.launch.train", "--arch", "smollm-360m",
+              "--reduced", "--steps", "8", "--batch", "2", "--seq", "32",
+              "--log-every", "4"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "step" in r.stdout
+
+
+def test_serve_driver_cli():
+    r = _run(["-m", "repro.launch.serve", "--arch", "qwen2.5-3b",
+              "--reduced", "--batch", "2", "--prompt-len", "8",
+              "--gen", "4"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert out["generated"] == 4
+
+
+def test_train_driver_fault_injection_and_resume(tmp_path):
+    """Driver-level FT: die mid-run, relaunch, resume from checkpoint."""
+    ckpt = str(tmp_path / "ckpt")
+    args = ["-m", "repro.launch.train", "--arch", "smollm-360m", "--reduced",
+            "--steps", "12", "--batch", "2", "--seq", "32",
+            "--ckpt-dir", ckpt, "--ckpt-every", "4", "--log-every", "4"]
+    r1 = _run(args + ["--die-at-step", "9"])
+    assert r1.returncode == 42, r1.stderr[-1500:]   # injected crash
+    r2 = _run(args)
+    assert r2.returncode == 0, r2.stderr[-1500:]
+    # resumes from the newest *complete* checkpoint: step 8 normally, or
+    # step 4 when the crash killed the async step-8 write mid-flight —
+    # both are correct fault-tolerant behaviour (atomic fallback).
+    import re
+    m = re.search(r"resumed from step (\d+)", r2.stdout)
+    assert m and int(m.group(1)) in (4, 8), r2.stdout
+
+
+DRYRUN_SNIPPET = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, json
+import jax.numpy as jnp
+from repro.configs import get_config, reduced, TrainConfig, get_shape
+from repro.configs.base import ShapeConfig
+from repro.launch.specs import input_specs
+from repro.perf.roofline import roofline_from_compiled
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+cfg = reduced(get_config("qwen2.5-3b"), d_model=64, vocab=512)
+shape = ShapeConfig("tiny_train", 64, 8, "train")
+prog = input_specs(cfg, shape, mesh, TrainConfig(remat_policy="none"))
+with mesh:
+    lowered = jax.jit(prog.fn, in_shardings=prog.in_shardings,
+                      donate_argnums=prog.donate_argnums).lower(*prog.args)
+    compiled = lowered.compile()
+mem = compiled.memory_analysis()
+rf = roofline_from_compiled(compiled, 8)
+print(json.dumps({"ok": True, "flops": rf.flops,
+                  "collectives": rf.collective_bytes > 0}))
+"""
+
+
+def test_dryrun_multipod_smoke():
+    """lower+compile on a (pod,data,model) placeholder mesh — proves the
+    sharding config is coherent, including the pod axis (subprocess so the
+    device-count flag doesn't leak into this test session)."""
+    r = _run(["-c", DRYRUN_SNIPPET])
+    assert r.returncode == 0, r.stderr[-3000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert out["ok"] and out["flops"] > 0
+    assert out["collectives"] is True     # sharded program must communicate
+
+
+def test_roofline_collective_parser():
+    from repro.perf.roofline import parse_collectives
+    hlo = """
+  %ar = f32[128,256]{1,0} all-reduce(f32[128,256] %x), replica_groups={{0,1}}
+  %ag = bf16[64]{0} all-gather(bf16[32] %y), dimensions={0}
+  %rs = (f32[16]{0}, f32[16]{0}) reduce-scatter(...), dimensions={0}
+  %cp = u32[4]{0} collective-permute(u32[4] %z)
+  %nn = f32[8]{0} add(f32[8] %a, f32[8] %b)
+"""
+    stats = parse_collectives(hlo)
+    assert stats.counts["all-reduce"] == 1
+    assert stats.counts["all-gather"] == 1
+    assert stats.counts["collective-permute"] == 1
+    ar_bytes = 128 * 256 * 4 * 2          # x2 ring coefficient
+    assert stats.bytes_by_kind["all-reduce"] == ar_bytes

@@ -25,6 +25,13 @@ DROPOUTS = (0.2, 0.5, 0.8)
 N_DEVICES = (1, 2, 4)        # paper used {1,2,3} GPUs; host-device counts must
                              # divide the simulated device pool, so {1,2,4}.
 BATCH_SIZES = (8, 16, 32, 64, 128)
+# Distribution extrinsics beyond the paper's table: the sharding strategy
+# and gradient wire format both reshape the communication term (the axis
+# Shi 1711.05979 / Ulanov 1610.06276 show dominates distributed scaling).
+# Strategies here are the ones meaningful for a small conv net; the full
+# registry lives in repro.dist.sharding.STRATEGIES.
+DIST_STRATEGIES = ("dp", "fsdp")
+GRAD_COMPRESSIONS = ("none", "bf16", "int8")   # wire bits 32 / 16 / 8
 
 DATASET_SHAPES = {
     "mnist": (28, 28, 1),
@@ -50,10 +57,17 @@ class LeNet5Config:
     # extrinsic
     n_devices: int = 1
     batch_size: int = 32
+    strategy: str = "dp"
+    compression: str = "none"
 
     @property
     def image_shape(self) -> Tuple[int, int, int]:
         return DATASET_SHAPES[self.dataset]
+
+    @property
+    def wire_bits(self) -> int:
+        from repro.dist.compression import WIRE_BITS
+        return WIRE_BITS[self.compression]
 
     def intrinsic_dict(self) -> dict:
         return dict(kernel_size=self.kernel_size, pool_size=self.pool_size,
@@ -63,4 +77,11 @@ class LeNet5Config:
                     stride=self.stride, dropout=self.dropout)
 
     def extrinsic_dict(self) -> dict:
-        return dict(n_devices=self.n_devices, batch_size=self.batch_size)
+        # wire_bits is the numeric footprint of the compression choice:
+        # it enters the fitted model as a power term like the other
+        # extrinsics, so one fit predicts across wire formats.
+        return dict(n_devices=self.n_devices, batch_size=self.batch_size,
+                    wire_bits=self.wire_bits)
+
+    def dist_dict(self) -> dict:
+        return dict(strategy=self.strategy, compression=self.compression)

@@ -1,0 +1,28 @@
+"""Distribution substrate: logical-axis sharding rules + wire compression.
+
+``repro.dist.sharding`` maps the *logical* axes on ``Param`` leaves
+("embed", "mlp", "vocab", ...) to physical mesh axes per parallelism
+strategy (``STRATEGIES``); ``repro.dist.compression`` provides the
+gradient wire formats (bf16 cast, int8, int8 + error feedback) and a
+``shard_map``-compatible compressed all-reduce-mean.
+
+Both halves are the extrinsic axes of the performance model: the
+strategy decides *what* moves between devices, the compression decides
+*how many bits per value* — together they parameterize the communication
+term the fitted model must predict across.
+"""
+from repro.dist.compression import (COMPRESSIONS, WIRE_BITS,
+                                    compress_decompress, compress_tree,
+                                    compressed_psum_mean, dequantize_int8,
+                                    init_error_feedback, quantize_int8)
+from repro.dist.sharding import (BATCH, STRATEGIES, Strategy, batch_pspec,
+                                 logical_to_pspec, maybe_constrain,
+                                 param_pspecs, param_shardings)
+
+__all__ = [
+    "BATCH", "STRATEGIES", "Strategy", "batch_pspec", "logical_to_pspec",
+    "maybe_constrain", "param_pspecs", "param_shardings",
+    "COMPRESSIONS", "WIRE_BITS", "compress_decompress", "compress_tree",
+    "compressed_psum_mean", "dequantize_int8", "init_error_feedback",
+    "quantize_int8",
+]

@@ -1,0 +1,164 @@
+"""Gradient wire-format compression: bf16, int8, int8 + error feedback.
+
+The all-reduce term dominates distributed scaling once compute is sharded
+(Shi et al. 1711.05979; Ulanov et al. 1610.06276), and its cost is linear
+in bits-per-value on the wire. This module owns that axis:
+
+  * ``quantize_int8`` — symmetric max-abs int8 with a single fp32 scale;
+    round-to-nearest, so |x - q·s| <= s/2 elementwise.
+  * ``compress_decompress`` — one gradient through the wire format and
+    back, with optional error feedback: the residual of step t is added
+    to the gradient of step t+1, which keeps the *accumulated* update
+    within one quantization ulp of the true sum at any horizon
+    (Karimireddy et al.-style EF; see tests/test_substrate.py).
+  * ``compressed_psum_mean`` — a shared-scale int8 all-reduce-mean usable
+    inside ``shard_map`` (scale agreed via pmax, so every device
+    quantizes onto the same grid and the integer psum is exact).
+  * ``compress_tree`` / ``init_error_feedback`` — pytree plumbing used by
+    the train step; error-feedback buffers are ``Param`` leaves carrying
+    the same logical axes as their parameter, so they inherit the
+    parameter's sharding for free.
+
+``WIRE_BITS`` maps each mode to its bits-per-value — the numeric
+extrinsic feature the performance model fits a power law over.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Param, is_param
+
+COMPRESSIONS = ("none", "bf16", "int8", "int8_ef")
+
+# Bits per value on the wire; the perf model's compression extrinsic.
+WIRE_BITS = {"none": 32, "bf16": 16, "int8": 8, "int8_ef": 8}
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric max-abs quantization -> (int8 values, fp32 scale)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf)) / 127.0
+    q = jnp.round(xf / jnp.where(scale > 0, scale, 1.0))
+    q = jnp.clip(q, -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_decompress(g: jax.Array, mode: str,
+                        err: Optional[jax.Array] = None
+                        ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Send ``g`` through the wire format; returns (decompressed, new_err).
+
+    ``err`` is the error-feedback residual carried between steps (only
+    used and updated in "int8_ef" mode; pass ``None`` for a fresh start).
+    """
+    if mode == "none":
+        return g, err
+    gf = g.astype(jnp.float32)
+    if mode == "bf16":
+        return gf.astype(jnp.bfloat16).astype(jnp.float32), err
+    if mode == "int8":
+        q, s = quantize_int8(gf)
+        return dequantize_int8(q, s), err
+    if mode == "int8_ef":
+        carried = gf if err is None else gf + err.astype(jnp.float32)
+        q, s = quantize_int8(carried)
+        d = dequantize_int8(q, s)
+        return d, carried - d
+    raise ValueError(f"unknown compression mode {mode!r}; "
+                     f"have {COMPRESSIONS}")
+
+
+def compressed_psum_mean(x: jax.Array, axis_name: str,
+                         mode: str = "int8") -> jax.Array:
+    """All-reduce-mean of ``x`` over ``axis_name`` in the wire format.
+
+    Must run inside ``shard_map`` (or pmap): the quantization grid is
+    agreed across devices with a pmax of the local max-abs, so the
+    integer sum is exact and only the shared scale carries rounding.
+    """
+    n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+    xf = x.astype(jnp.float32)
+    if mode == "none":
+        return (jax.lax.psum(xf, axis_name) / n).astype(x.dtype)
+    if mode == "bf16":
+        summed = jax.lax.psum(xf.astype(jnp.bfloat16).astype(jnp.float32),
+                              axis_name)
+        return (summed / n).astype(x.dtype)
+    if mode not in ("int8", "int8_ef"):
+        raise ValueError(f"unknown compression mode {mode!r}")
+    scale = jax.lax.pmax(jnp.max(jnp.abs(xf)), axis_name) / 127.0
+    q = jnp.clip(jnp.round(xf / jnp.where(scale > 0, scale, 1.0)),
+                 -127, 127)
+    summed = jax.lax.psum(q, axis_name) * scale
+    return (summed / n).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Pytree plumbing (train-step integration)
+# ---------------------------------------------------------------------------
+
+def init_error_feedback(params) -> Any:
+    """fp32 zero residuals, one per parameter, carrying the same logical
+    axes (so state_shardings shards them exactly like the parameter)."""
+    return jax.tree.map(
+        lambda p: Param(jnp.zeros(p.value.shape, jnp.float32), p.axes),
+        params, is_leaf=is_param)
+
+
+class _Pair:
+    """Opaque (decompressed, residual) holder; deliberately NOT a pytree
+    node so jax.tree.map treats it as a leaf during the unzip below."""
+    __slots__ = ("d", "e")
+
+    def __init__(self, d, e):
+        self.d = d
+        self.e = e
+
+
+def _value(x):
+    return x.value if is_param(x) else x
+
+
+def compress_tree(grads, mode: str, ef=None):
+    """Apply ``compress_decompress`` leafwise -> (new_grads, new_ef).
+
+    ``grads`` leaves may be raw arrays (micro-batch accumulators) or
+    ``Param``-wrapped cotangents; the wrapper kind is preserved. ``ef``
+    (when present) is the ``init_error_feedback`` tree; in "int8_ef"
+    mode a missing ``ef`` is initialized to zeros and returned, so the
+    residual is never silently dropped — callers must thread it.
+    """
+    if mode in (None, "none"):
+        return grads, ef
+    if mode == "int8_ef" and ef is None:
+        ef = jax.tree.map(
+            lambda g: (Param(jnp.zeros(g.value.shape, jnp.float32), g.axes)
+                       if is_param(g) else jnp.zeros(g.shape, jnp.float32)),
+            grads, is_leaf=is_param)
+
+    def one(g, e):
+        d, ne = compress_decompress(_value(g),
+                                    mode,
+                                    None if e is None else _value(e))
+        d_out = Param(d, g.axes) if is_param(g) else d
+        if e is not None and ne is not None:
+            ne = Param(ne, e.axes) if is_param(e) else ne
+        return _Pair(d_out, e if ne is None else ne)
+
+    if ef is None:
+        pairs = jax.tree.map(lambda g: one(g, None), grads,
+                             is_leaf=is_param)
+    else:
+        pairs = jax.tree.map(one, grads, ef, is_leaf=is_param)
+    is_pair = lambda x: isinstance(x, _Pair)
+    new_grads = jax.tree.map(lambda p: p.d, pairs, is_leaf=is_pair)
+    new_ef = (None if ef is None
+              else jax.tree.map(lambda p: p.e, pairs, is_leaf=is_pair))
+    return new_grads, new_ef

@@ -1,0 +1,284 @@
+"""Logical-axis -> PartitionSpec resolution per parallelism strategy.
+
+Model code annotates every ``Param`` dimension with a *logical* axis name
+("embed", "mlp", "vocab", "expert", "heads", "kv_heads", "layers", or
+``None``); activations are constrained with ``maybe_constrain`` using the
+``BATCH`` sentinel plus raw mesh-axis names. This module owns the mapping
+from those logical names to the *physical* mesh axes of whatever mesh is
+active, under a named strategy:
+
+  dp       pure data parallelism — params replicated, batch over (pod, data)
+  fsdp     ZeRO-3: params sharded over the data axis (one dim per param)
+  tp       Megatron tensor parallelism over the model axis
+  fsdp_tp  2-D: embed over data, mlp/heads/experts/vocab over model
+
+Two invariants hold for every resolved spec (property-tested):
+
+  * a mesh axis is used by at most one dimension of a given array
+    (GSPMD rejects reuse, so we resolve left-to-right and first-hit-wins);
+  * a dimension is only sharded if its size is divisible by the product
+    of the mesh axes assigned to it — otherwise the dim is left
+    unsharded (e.g. a 50281-row vocab on a 16-wide model axis).
+
+Everything here is shape-arithmetic only: functions accept a concrete
+``Mesh``, an ``AbstractMesh``, or a plain ``{axis: size}`` mapping, so the
+rules are testable without a device pool.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.layers import is_param
+
+
+class _BatchSentinel:
+    """Logical marker for 'the batch dimension' in activation constraints."""
+
+    def __repr__(self):
+        return "BATCH"
+
+
+BATCH = _BatchSentinel()
+
+# Mesh axes that carry the batch, outermost first (multi-pod meshes put a
+# "pod" axis in front of "data"; both shard the batch).
+BATCH_AXES = ("pod", "data")
+
+# A rule candidate: either one mesh axis, or a tuple of mesh axes that
+# shard the same dimension jointly. NB the rules map to *tuples of
+# candidates*: rules["vocab"] = ("model", "data") is an ordered fallback
+# list of two single-axis candidates; joint 2-D sharding of one dim must
+# be written (("model", "data"),).
+Candidate = Union[str, Tuple[str, ...]]
+
+
+@dataclass(frozen=True)
+class Strategy:
+    """Named parallelism strategy: logical axis -> mesh-axis candidates.
+
+    ``rules[logical]`` is tried in order; the first candidate whose mesh
+    axes are all present, unused by earlier dims of the same array, and
+    size-compatible with the dimension wins.
+    """
+    name: str
+    rules: Mapping[str, Tuple[Candidate, ...]] = field(default_factory=dict)
+    description: str = ""
+
+    def candidates(self, logical: Optional[str]) -> Tuple[Candidate, ...]:
+        if logical is None:
+            return ()
+        return tuple(self.rules.get(logical, ()))
+
+
+STRATEGIES: Dict[str, Strategy] = {
+    "dp": Strategy("dp", rules={}, description=(
+        "Pure data parallelism: parameters replicated, batch sharded; "
+        "gradients all-reduced every step.")),
+    "fsdp": Strategy("fsdp", rules={
+        "embed": ("data",), "vocab": ("data",), "mlp": ("data",),
+        "expert": ("data",), "heads": ("data",), "kv_heads": ("data",),
+    }, description=(
+        "ZeRO-3 style: each parameter sharded along its first shardable "
+        "dim over the data axis; params are all-gathered per layer.")),
+    "tp": Strategy("tp", rules={
+        "mlp": ("model",), "heads": ("model",), "kv_heads": ("model",),
+        "expert": ("model",), "vocab": ("model",),
+    }, description=(
+        "Megatron tensor parallelism: hidden/head/expert/vocab dims over "
+        "the model axis; activations all-reduced inside each block.")),
+    "fsdp_tp": Strategy("fsdp_tp", rules={
+        "embed": ("data",),
+        "mlp": ("model",), "heads": ("model",), "kv_heads": ("model",),
+        "expert": ("model",),
+        "vocab": ("model", "data"),
+    }, description=(
+        "2-D sharding: tensor-parallel over model, parameter (ZeRO) "
+        "sharding of the remaining embed dim over data.")),
+}
+
+
+def resolve_strategy(strategy: Union[str, Strategy]) -> Strategy:
+    if isinstance(strategy, Strategy):
+        return strategy
+    try:
+        return STRATEGIES[strategy]
+    except KeyError:
+        raise ValueError(f"unknown strategy {strategy!r}; "
+                         f"have {sorted(STRATEGIES)}") from None
+
+
+# ---------------------------------------------------------------------------
+# Mesh introspection
+# ---------------------------------------------------------------------------
+
+MeshLike = Union[Mesh, Mapping[str, int]]
+
+
+def axis_sizes(mesh: MeshLike) -> Dict[str, int]:
+    """{axis: size} from a Mesh, AbstractMesh, or plain mapping."""
+    shape = getattr(mesh, "shape", mesh)
+    return dict(shape)
+
+
+def active_mesh() -> Optional[Mesh]:
+    """The mesh installed by an enclosing ``with mesh:`` block, if any.
+
+    jax 0.4.x keeps this on ``thread_resources``; returns None outside
+    any mesh context so single-device eager/jit paths stay unconstrained.
+    """
+    try:
+        from jax._src import mesh as mesh_lib
+        env_mesh = mesh_lib.thread_resources.env.physical_mesh
+        if env_mesh is not None and not env_mesh.empty:
+            return env_mesh
+    except Exception:
+        pass
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Core resolution
+# ---------------------------------------------------------------------------
+
+def _axes_of(candidate: Candidate) -> Tuple[str, ...]:
+    return candidate if isinstance(candidate, tuple) else (candidate,)
+
+
+def _fits(cand_axes: Sequence[str], sizes: Mapping[str, int], used: set,
+          dim: Optional[int]) -> bool:
+    prod = 1
+    for a in cand_axes:
+        if a not in sizes or a in used:
+            return False
+        prod *= sizes[a]
+    if dim is not None and (prod == 0 or dim % prod != 0):
+        return False
+    return True
+
+
+def logical_to_pspec(axes: Sequence[Optional[str]], mesh: MeshLike,
+                     strategy: Union[str, Strategy],
+                     dim_sizes: Optional[Sequence[int]] = None) -> P:
+    """Resolve one array's logical axes to a PartitionSpec.
+
+    ``dim_sizes`` (when given) enables divisibility-aware skipping: a dim
+    whose size is not a multiple of the assigned mesh-axes product stays
+    unsharded. Resolution is left-to-right; a mesh axis consumed by an
+    earlier dim is never reused by a later one.
+    """
+    strat = resolve_strategy(strategy)
+    sizes = axis_sizes(mesh)
+    if dim_sizes is not None and len(dim_sizes) != len(axes):
+        raise ValueError(f"dim_sizes {tuple(dim_sizes)} does not match "
+                         f"axes {tuple(axes)}")
+    used: set = set()
+    entries = []
+    for i, logical in enumerate(axes):
+        dim = None if dim_sizes is None else int(dim_sizes[i])
+        entry = None
+        for cand in strat.candidates(logical):
+            cand_axes = _axes_of(cand)
+            if _fits(cand_axes, sizes, used, dim):
+                used.update(cand_axes)
+                entry = cand_axes if len(cand_axes) > 1 else cand_axes[0]
+                break
+        entries.append(entry)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def param_pspecs(params, mesh: MeshLike, strategy: Union[str, Strategy]):
+    """Pytree of PartitionSpec matching the Param leaves of ``params``.
+
+    Works on real arrays and on ``jax.eval_shape`` skeletons alike (only
+    ``.value.shape`` is read).
+    """
+    strat = resolve_strategy(strategy)
+
+    def one(p):
+        return logical_to_pspec(p.axes, mesh, strat,
+                                dim_sizes=tuple(p.value.shape))
+
+    return jax.tree.map(one, params, is_leaf=is_param)
+
+
+def param_shardings(params, mesh: Mesh, strategy: Union[str, Strategy]):
+    """Like ``param_pspecs`` but wrapped as NamedShardings on ``mesh``."""
+    return jax.tree.map(lambda spec: NamedSharding(mesh, spec),
+                        param_pspecs(params, mesh, strategy),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Batch / activation constraints
+# ---------------------------------------------------------------------------
+
+def _batch_entry(sizes: Mapping[str, int], used: set,
+                 dim: Optional[int]):
+    """Greedy (pod, data) batch sharding honouring divisibility."""
+    chosen = []
+    prod = 1
+    for a in BATCH_AXES:
+        if a not in sizes or a in used:
+            continue
+        if dim is not None and dim % (prod * sizes[a]) != 0:
+            continue
+        chosen.append(a)
+        prod *= sizes[a]
+    if not chosen:
+        return None
+    return tuple(chosen) if len(chosen) > 1 else chosen[0]
+
+
+def batch_pspec(mesh: MeshLike, ndim: int = 1,
+                batch_size: Optional[int] = None) -> P:
+    """PartitionSpec sharding dim 0 over the mesh's batch axes."""
+    sizes = axis_sizes(mesh)
+    entry = _batch_entry(sizes, set(), batch_size)
+    return P(*([entry] + [None] * (ndim - 1)))
+
+
+def maybe_constrain(x: jax.Array, *entries) -> jax.Array:
+    """``with_sharding_constraint`` iff a mesh context is active.
+
+    ``entries`` align with the leading dims of ``x`` (missing trailing
+    entries mean replicated). Each entry is ``None``, the ``BATCH``
+    sentinel (expands to the mesh's pod/data axes), a mesh-axis name, or
+    a tuple of mesh-axis names. Axes absent from the mesh, already used
+    by an earlier dim, or incompatible with the dim size are dropped —
+    so the same model code traces cleanly on a 1-CPU mesh and a
+    512-chip (pod, data, model) mesh.
+    """
+    mesh = active_mesh()
+    if mesh is None:
+        return x
+    sizes = axis_sizes(mesh)
+    used: set = set()
+    padded = tuple(entries) + (None,) * (x.ndim - len(entries))
+    resolved = []
+    for dim, e in zip(x.shape, padded):
+        dim = int(dim)
+        if e is None:
+            resolved.append(None)
+            continue
+        if isinstance(e, _BatchSentinel):
+            entry = _batch_entry(sizes, used, dim)
+        else:
+            cand_axes = _axes_of(e)
+            ok = _fits(cand_axes, sizes, used, dim)
+            entry = ((cand_axes if len(cand_axes) > 1 else cand_axes[0])
+                     if ok else None)
+        if entry is not None:
+            used.update(_axes_of(entry))
+        resolved.append(entry)
+    while resolved and resolved[-1] is None:
+        resolved.pop()
+    if not any(e is not None for e in resolved):
+        return x
+    sharding = NamedSharding(mesh, P(*resolved))
+    return jax.lax.with_sharding_constraint(x, sharding)

@@ -61,7 +61,9 @@ def run_cell(arch: str, shape_id: str, mesh_kind: str = "pod",
         shape = dataclasses.replace(shape, microbatches=microbatches)
     t0 = time.time()
     prog = input_specs(cfg, shape, mesh, tcfg, strategy)
-    with jax.sharding.set_mesh(mesh):
+    # Mesh context manager (jax.sharding.set_mesh only exists in newer jax);
+    # maybe_constrain reads the active mesh during tracing.
+    with mesh:
         jitted = jax.jit(prog.fn, in_shardings=prog.in_shardings,
                          donate_argnums=prog.donate_argnums)
         lowered = jitted.lower(*prog.args)

@@ -29,18 +29,8 @@ def _sds(shape, dtype):
 
 
 def _batch_axes(mesh: Mesh) -> Tuple[str, ...]:
-    return tuple(a for a in ("pod", "data") if a in mesh.shape)
-
-
-def _nbatch(mesh: Mesh) -> int:
-    n = 1
-    for a in _batch_axes(mesh):
-        n *= mesh.shape[a]
-    return n
-
-
-def _pentry(axes: Tuple[str, ...]):
-    return axes if len(axes) > 1 else (axes[0] if axes else None)
+    from repro.dist.sharding import BATCH_AXES
+    return tuple(a for a in BATCH_AXES if a in mesh.shape)
 
 
 # ---------------------------------------------------------------------------
@@ -62,9 +52,9 @@ def batch_structs(cfg: ModelConfig, B: int, S: int) -> Dict[str, Any]:
 
 
 def batch_shardings(batch_tree, mesh: Mesh):
-    entry = _pentry(_batch_axes(mesh))
     return jax.tree.map(
-        lambda x: NamedSharding(mesh, P(entry, *([None] * (x.ndim - 1)))),
+        lambda x: NamedSharding(
+            mesh, batch_pspec(mesh, x.ndim, int(x.shape[0]))),
         batch_tree)
 
 
@@ -72,12 +62,18 @@ def batch_shardings(batch_tree, mesh: Mesh):
 # Cache specs
 # ---------------------------------------------------------------------------
 
+def _batch_entry(mesh: Mesh, B: int):
+    """Greedy divisibility-aware batch entry — the same rule batch_pspec
+    applies to inputs, so caches and tokens never disagree on the batch
+    sharding (disagreement would insert a reshard every decode step)."""
+    spec = batch_pspec(mesh, 1, int(B))
+    return spec[0] if len(spec) else None
+
+
 def _cache_pspec(role: str, shape, mesh: Mesh) -> P:
     """Role-aware PartitionSpec; dims addressed from the right."""
     nd = len(shape)
     entries = [None] * nd
-    baxes = _batch_axes(mesh)
-    nb = _nbatch(mesh)
     model_ok = "model" in mesh.shape
     msz = mesh.shape.get("model", 1)
 
@@ -86,8 +82,9 @@ def _cache_pspec(role: str, shape, mesh: Mesh) -> P:
 
     if role in ("kv",):                      # [..., B, cap, kvh, hd]
         B, cap, kvh, hd = shape[-4], shape[-3], shape[-2], shape[-1]
-        if baxes and B % nb == 0:
-            set_from_right(4, _pentry(baxes))
+        be = _batch_entry(mesh, B)
+        if be is not None:
+            set_from_right(4, be)
         elif "data" in mesh.shape and cap % mesh.shape["data"] == 0:
             set_from_right(3, "data")
         if model_ok and kvh % msz == 0:
@@ -96,22 +93,25 @@ def _cache_pspec(role: str, shape, mesh: Mesh) -> P:
             set_from_right(1, "model")
     elif role in ("lat", "rope"):            # [..., B, cap, r]
         B, cap, r = shape[-3], shape[-2], shape[-1]
-        if baxes and B % nb == 0:
-            set_from_right(3, _pentry(baxes))
+        be = _batch_entry(mesh, B)
+        if be is not None:
+            set_from_right(3, be)
         elif "data" in mesh.shape and cap % mesh.shape["data"] == 0:
             set_from_right(2, "data")
         if role == "lat" and model_ok and r % msz == 0:
             set_from_right(1, "model")
     elif role == "conv":                     # [..., B, K-1, conv_dim]
         B, cdim = shape[-3], shape[-1]
-        if baxes and B % nb == 0:
-            set_from_right(3, _pentry(baxes))
+        be = _batch_entry(mesh, B)
+        if be is not None:
+            set_from_right(3, be)
         if model_ok and cdim % msz == 0:
             set_from_right(1, "model")
     elif role == "ssd":                      # [..., B, H, Pd, N]
         B, H = shape[-4], shape[-3]
-        if baxes and B % nb == 0:
-            set_from_right(4, _pentry(baxes))
+        be = _batch_entry(mesh, B)
+        if be is not None:
+            set_from_right(4, be)
         if model_ok and H % msz == 0:
             set_from_right(3, "model")
     # "pos": replicated
@@ -210,9 +210,7 @@ def input_specs(arch_or_cfg, shape: ShapeConfig, mesh: Mesh,
     B, cap = shape.global_batch, shape.seq_len
     caches, c_shard = cache_specs(cfg, B, cap, mesh)
     token = _sds((B, 1), jnp.int32)
-    t_shard = NamedSharding(mesh, P(_pentry(_batch_axes(mesh))
-                                    if B % _nbatch(mesh) == 0 else None,
-                                    None))
+    t_shard = NamedSharding(mesh, batch_pspec(mesh, 2, B))
     pos = _sds((), jnp.int32)
     pos_shard = _replicated(mesh)
     args = [params_shapes, caches, token, pos]

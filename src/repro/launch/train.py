@@ -25,7 +25,9 @@ import numpy as np
 
 from repro.configs import TrainConfig, get_config, reduced
 from repro.data import make_batch_for
+from repro.dist.sharding import STRATEGIES
 from repro.launch.mesh import make_mesh
+from repro.launch.specs import batch_shardings, state_shardings
 from repro.train import init_train_state, make_train_step
 from repro.train.checkpoint import CheckpointManager
 from repro.train.ft import StragglerDetector, plan_remesh
@@ -44,7 +46,9 @@ def main(argv=None):
                     choices=["adamw", "sgd", "adafactor"])
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--compression", default="none",
-                    choices=["none", "bf16", "int8_ef"])
+                    choices=["none", "bf16", "int8", "int8_ef"])
+    ap.add_argument("--strategy", default="fsdp_tp",
+                    choices=sorted(STRATEGIES))
     ap.add_argument("--remat", default="none")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=50)
@@ -67,7 +71,9 @@ def main(argv=None):
 
     n_dev = len(jax.devices())
     plan = plan_remesh(n_dev)
-    print(f"devices={n_dev} mesh={plan.mesh_shape} ({plan.reason})")
+    mesh = make_mesh(plan.mesh_shape, ("data", "model"))
+    print(f"devices={n_dev} mesh={plan.mesh_shape} "
+          f"strategy={args.strategy} ({plan.reason})")
 
     key = jax.random.PRNGKey(args.seed)
     state = init_train_state(key, cfg, tcfg)
@@ -80,8 +86,20 @@ def main(argv=None):
             state, start_step = ckpt.restore(state)
             print(f"resumed from step {start_step}")
 
+    # Sharded step: params/opt-state/EF buffers follow the logical-rule
+    # pspecs of the chosen strategy, batch shards over the data axis. On
+    # one CPU device every spec degenerates to replicated and the same
+    # program runs unchanged.
+    st_shard = state_shardings(state, mesh, args.strategy)
+    b_shard = batch_shardings(
+        make_batch_for(cfg, args.batch, args.seq, step=0, seed=args.seed),
+        mesh)
+    # out_shardings pins the new state to the same specs, so the donated
+    # state round-trips the jit boundary without a resharding mismatch.
     step_fn = jax.jit(make_train_step(cfg, tcfg,
                                       microbatches=args.microbatches),
+                      in_shardings=(st_shard, b_shard),
+                      out_shardings=(st_shard, None),
                       donate_argnums=(0,))
     detector = StragglerDetector(tolerance=args.straggler_tol)
 
@@ -94,7 +112,8 @@ def main(argv=None):
         batch = make_batch_for(cfg, args.batch, args.seq, step=step,
                                seed=args.seed)
         t0 = time.perf_counter()
-        state, metrics = step_fn(state, batch)
+        with mesh:
+            state, metrics = step_fn(state, batch)
         jax.block_until_ready(metrics["loss"])
         dt = time.perf_counter() - t0
         flagged = detector.observe(step, dt)

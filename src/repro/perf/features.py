@@ -4,25 +4,31 @@ from __future__ import annotations
 from typing import Dict
 
 from repro.configs.lenet5 import (ACTIVATIONS, BATCH_SIZES, DATASETS,
-                                  DROPOUTS, KERNEL_SIZES, LEARNING_RATES,
-                                  LeNet5Config, N_DEVICES, N_FILTERS,
-                                  OPTIMIZERS, PADDING_MODES, POOL_SIZES,
-                                  STRIDES)
+                                  DIST_STRATEGIES, DROPOUTS, KERNEL_SIZES,
+                                  LEARNING_RATES, LeNet5Config, N_DEVICES,
+                                  N_FILTERS, OPTIMIZERS, PADDING_MODES,
+                                  POOL_SIZES, STRIDES)
 from repro.core.generic_model import FeatureSpec
 
 # Table 1, split per the paper's treatment: numeric intrinsics get power
 # terms; categorical intrinsics get per-value constants; the "framework"
 # axis of the paper maps to our execution-mode axis (see DESIGN.md §5).
+# Beyond the paper: the sharding strategy (categorical constant) and the
+# gradient wire width (numeric extrinsic power term — 32/16/8 bits for
+# none/bf16/int8 compression) enter so one fit predicts across the
+# distributed scenarios repro.dist can actually run.
 LENET_SPEC = FeatureSpec(
     numeric=("kernel_size", "pool_size", "n_filters", "learning_rate",
              "stride", "dropout"),
     categorical=(("activation", ACTIVATIONS),
                  ("optimizer", OPTIMIZERS),
                  ("dataset", DATASETS),
-                 ("padding", PADDING_MODES)),
-    extrinsic=("n_devices", "batch_size"),
+                 ("padding", PADDING_MODES),
+                 ("strategy", DIST_STRATEGIES)),
+    extrinsic=("n_devices", "batch_size", "wire_bits"),
 )
 
 
 def lenet_features(cfg: LeNet5Config) -> Dict:
-    return {**cfg.intrinsic_dict(), **cfg.extrinsic_dict()}
+    return {**cfg.intrinsic_dict(), **cfg.extrinsic_dict(),
+            **cfg.dist_dict()}

@@ -23,27 +23,48 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.lenet5 import (ACTIVATIONS, BATCH_SIZES, DATASETS,
-                                  DROPOUTS, KERNEL_SIZES, LEARNING_RATES,
-                                  LeNet5Config, N_DEVICES, N_FILTERS,
-                                  OPTIMIZERS, PADDING_MODES, POOL_SIZES,
-                                  STRIDES)
+                                  DIST_STRATEGIES, DROPOUTS,
+                                  GRAD_COMPRESSIONS, KERNEL_SIZES,
+                                  LEARNING_RATES, LeNet5Config, N_DEVICES,
+                                  N_FILTERS, OPTIMIZERS, PADDING_MODES,
+                                  POOL_SIZES, STRIDES)
 from repro.data.synthetic import lenet_batch
+from repro.dist.compression import WIRE_BITS
 from repro.models.lenet import init_lenet, lenet_loss
 from repro.perf.features import lenet_features
 
 MODES = ("jit", "jit_donate", "eager")
 
-# α-β ring all-reduce model (documented simulation; see DESIGN.md §5).
+# α-β ring collective model (documented simulation; see DESIGN.md §5).
 RING_ALPHA_S = 20e-6            # per-hop latency
 RING_BW = 12.5e9                # bytes/s inter-device link
 
 
-def comm_seconds(n_devices: int, param_bytes: int) -> float:
+def comm_seconds(n_devices: int, param_bytes: int, strategy: str = "dp",
+                 wire_bits: int = 32) -> float:
+    """Per-iteration communication time of one sampled scenario.
+
+    dp    — ring all-reduce of the (compressed) gradients:
+            2·(n-1)/n · bytes·bits/32 volume, 2·(n-1) latency hops.
+    fsdp  — reduce-scatter of compressed gradients + two all-gathers of
+            the (uncompressed, fp32-wire) parameter shards, one each for
+            forward and backward (canonical ZeRO-3 schedule):
+            (n-1)/n · bytes·(bits/32 + 2), 3·(n-1) hops.
+    """
     if n_devices <= 1:
         return 0.0
     n = n_devices
-    return 2 * (n - 1) / n * param_bytes / RING_BW + 2 * (n - 1) * \
-        RING_ALPHA_S
+    grad_frac = wire_bits / 32.0
+    if strategy == "fsdp":
+        vol = (n - 1) / n * param_bytes * (grad_frac + 2.0)
+        hops = 3 * (n - 1)
+    elif strategy == "dp":                  # ring all-reduce
+        vol = 2 * (n - 1) / n * param_bytes * grad_frac
+        hops = 2 * (n - 1)
+    else:
+        raise ValueError(f"no comm model for strategy {strategy!r}; "
+                         f"have {DIST_STRATEGIES}")
+    return vol / RING_BW + hops * RING_ALPHA_S
 
 
 def sample_config(rng: np.random.Generator) -> LeNet5Config:
@@ -60,6 +81,8 @@ def sample_config(rng: np.random.Generator) -> LeNet5Config:
         dropout=float(rng.choice(DROPOUTS)),
         n_devices=int(rng.choice(N_DEVICES)),
         batch_size=int(rng.choice(BATCH_SIZES)),
+        strategy=str(rng.choice(DIST_STRATEGIES)),
+        compression=str(rng.choice(GRAD_COMPRESSIONS)),
     )
 
 
@@ -126,7 +149,8 @@ def measure_trial(cfg: LeNet5Config, mode: str, *, n_iters: int = 3,
     measured = float(np.median(times))
 
     pb = sum(int(np.prod(x.shape)) * 4 for x in jax.tree.leaves(params))
-    comm = comm_seconds(cfg.n_devices, pb)
+    comm = comm_seconds(cfg.n_devices, pb, strategy=cfg.strategy,
+                        wire_bits=WIRE_BITS[cfg.compression])
     return SweepRow(features=lenet_features(cfg), mode=mode,
                     measured_ms=measured * 1e3, comm_ms=comm * 1e3,
                     time_ms=measured * 1e3 + comm * 1e3, param_bytes=pb)

@@ -1,0 +1,138 @@
+"""Minimal, deterministic stand-in for `hypothesis` (property testing).
+
+Loaded by ``tests/conftest.py`` ONLY when the real package is absent
+(hermetic CI images without network access). It implements the subset
+this suite uses — ``given``, ``settings``, and the ``strategies``
+generators — by drawing ``max_examples`` pseudo-random examples from a
+seed derived from the test name, so runs are reproducible and failures
+print the falsifying example. If `hypothesis` is installed it always
+wins; nothing here shadows it.
+"""
+from __future__ import annotations
+
+import types
+import zlib
+
+import numpy as _np
+
+__version__ = "0.0-stub"
+
+
+class _Strategy:
+    """A draw function wrapped with the tiny API the suite needs."""
+
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng=None):
+        rng = rng or _np.random.default_rng(0)
+        return self._draw(rng)
+
+    def map(self, f):
+        return _Strategy(lambda rng: f(self._draw(rng)))
+
+    def filter(self, pred, max_tries: int = 1000):
+        def draw(rng):
+            for _ in range(max_tries):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise RuntimeError("filter predicate never satisfied")
+        return _Strategy(draw)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def floats(min_value: float, max_value: float, **_kw) -> _Strategy:
+    return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+def sampled_from(values) -> _Strategy:
+    seq = list(values)
+    return _Strategy(lambda rng: seq[int(rng.integers(0, len(seq)))])
+
+
+def just(value) -> _Strategy:
+    return _Strategy(lambda rng: value)
+
+
+def lists(elements: _Strategy, min_size: int = 0,
+          max_size: int = 10, **_kw) -> _Strategy:
+    def draw(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        return [elements.example(rng) for _ in range(n)]
+    return _Strategy(draw)
+
+
+def tuples(*strats: _Strategy) -> _Strategy:
+    return _Strategy(lambda rng: tuple(s.example(rng) for s in strats))
+
+
+strategies = types.SimpleNamespace(
+    integers=integers, floats=floats, booleans=booleans,
+    sampled_from=sampled_from, just=just, lists=lists, tuples=tuples)
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise _Unsatisfied()
+    return True
+
+
+class _Unsatisfied(Exception):
+    pass
+
+
+def settings(max_examples: int = 100, deadline=None, **_kw):
+    """Decorator storing run options on an (already-)given-wrapped test."""
+    def deco(fn):
+        opts = getattr(fn, "_stub_settings", None)
+        if opts is None:
+            opts = fn._stub_settings = {}
+        opts["max_examples"] = max_examples
+        return fn
+    return deco
+
+
+def given(*strats: _Strategy, **kw_strats: _Strategy):
+    def deco(fn):
+        def wrapper():
+            opts = getattr(wrapper, "_stub_settings", {})
+            n = opts.get("max_examples", 100)
+            rng = _np.random.default_rng(
+                zlib.crc32(fn.__qualname__.encode()))
+            for i in range(n):
+                args = [s.example(rng) for s in strats]
+                kwargs = {k: s.example(rng) for k, s in kw_strats.items()}
+                try:
+                    fn(*args, **kwargs)
+                except _Unsatisfied:
+                    continue
+                except AssertionError as e:
+                    raise AssertionError(
+                        f"falsifying example #{i}: args={args!r} "
+                        f"kwargs={kwargs!r}: {e}") from e
+            return None
+
+        # Copy identity but NOT __wrapped__: pytest must see a
+        # zero-argument signature, not the strategy parameters.
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper._stub_settings = getattr(fn, "_stub_settings", {})
+        return wrapper
+    return deco
+
+
+class HealthCheck:
+    too_slow = "too_slow"
+    filter_too_much = "filter_too_much"
+    data_too_large = "data_too_large"
+    all = classmethod(lambda cls: [])

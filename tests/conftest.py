@@ -1,5 +1,25 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests see 1 device;
-only the dry-run (subprocess) gets the 512-device placeholder pool."""
+only the dry-run (subprocess) gets the 512-device placeholder pool.
+
+Also gates the `hypothesis` dependency: hermetic CI images may not have
+it installed, so when the import fails we register the deterministic
+fallback in ``tests/_hypothesis_stub.py`` under the same module name
+before any test module imports it. A real install always takes priority.
+"""
+import importlib.util
+import os
+import sys
+
+try:
+    import hypothesis  # noqa: F401  (real package wins when present)
+except ImportError:
+    _p = os.path.join(os.path.dirname(__file__), "_hypothesis_stub.py")
+    _spec = importlib.util.spec_from_file_location("hypothesis", _p)
+    _mod = importlib.util.module_from_spec(_spec)
+    _spec.loader.exec_module(_mod)
+    sys.modules["hypothesis"] = _mod
+    sys.modules["hypothesis.strategies"] = _mod.strategies
+
 import jax
 import pytest
 

@@ -7,6 +7,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import FeatureSpec, fit_model
 from repro.core.baselines import RandomForestRegressor, SVR, encode_blackbox
+from repro.core.de import de_multi_seed, differential_evolution_jax
 from repro.core.generic_model import (cost_fn, encode_dataset, metrics,
                                       predict_times)
 
@@ -97,6 +98,82 @@ def test_blackbox_baselines():
     m_svr = metrics(np.asarray(test_t), svr.predict(Xt))
     assert m_rf["mape"] < 0.25
     assert m_rf["mape"] < m_svr["mape"]
+
+
+# ---------------------------------------------------------------------------
+# generic_model invariants
+# ---------------------------------------------------------------------------
+
+def test_predict_times_batched_matches_unbatched():
+    """predict_times on a [K, M] population must equal K single-x calls
+    row for row (the DE fit depends on this vmap-shaped agreement)."""
+    samples, _ = _sample(50)
+    Xn, Xc, Xe = encode_dataset(SPEC, samples)
+    lo, hi = SPEC.bounds()
+    rng = np.random.default_rng(1)
+    xs = jnp.asarray(rng.uniform(lo, hi, size=(5, SPEC.n_params))
+                     .astype(np.float32))
+    batched = np.asarray(predict_times(SPEC, xs, Xn, Xc, Xe))
+    assert batched.shape == (5, 50)
+    for i in range(5):
+        single = np.asarray(predict_times(SPEC, xs[i], Xn, Xc, Xe))
+        np.testing.assert_allclose(batched[i], single, rtol=1e-5,
+                                   atol=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 5), st.lists(st.integers(1, 4), min_size=0,
+                                   max_size=3), st.integers(0, 4))
+def test_spec_length_invariants(n_num, cat_sizes, n_ext):
+    """bounds()/param_names()/split() all agree with n_params for any
+    feature-spec shape."""
+    spec = FeatureSpec(
+        numeric=tuple(f"n{i}" for i in range(n_num)),
+        categorical=tuple(
+            (f"c{j}", tuple(f"v{j}_{k}" for k in range(sz)))
+            for j, sz in enumerate(cat_sizes)),
+        extrinsic=tuple(f"e{i}" for i in range(n_ext)))
+    lo, hi = spec.bounds()
+    names = spec.param_names()
+    assert len(names) == spec.n_params == lo.shape[0] == hi.shape[0]
+    assert (lo <= hi).all()
+    a, p, acat, q, C = spec.split(jnp.arange(spec.n_params,
+                                             dtype=jnp.float32))
+    assert a.shape[-1] == spec.n_num and p.shape[-1] == spec.n_num
+    assert acat.shape[-1] == spec.n_cat_total
+    assert q.shape[-1] == spec.n_ext
+    assert C.ndim == 0
+
+
+# ---------------------------------------------------------------------------
+# DE optimizer
+# ---------------------------------------------------------------------------
+
+def test_de_converges_on_sphere():
+    """Known analytic objective: DE must find the interior minimum of a
+    4-d sphere function to high accuracy."""
+    c = jnp.asarray([1.5, -2.0, 0.5, 3.0])
+    cost = lambda x: jnp.sum((x - c) ** 2)
+    res = differential_evolution_jax(
+        cost, (np.full(4, -5.0), np.full(4, 5.0)), seed=0, maxiter=150)
+    assert float(res.fun) < 1e-3, float(res.fun)
+    np.testing.assert_allclose(np.asarray(res.x), np.asarray(c),
+                               atol=0.05)
+
+
+def test_de_respects_bounds_and_is_deterministic():
+    c = jnp.asarray([4.9, -4.9])         # optimum at the box corner
+    cost = lambda x: jnp.sum((x - c) ** 2)
+    bounds = (np.full(2, -2.0), np.full(2, 2.0))
+    r1 = differential_evolution_jax(cost, bounds, seed=3, maxiter=80)
+    r2 = differential_evolution_jax(cost, bounds, seed=3, maxiter=80)
+    assert (np.asarray(r1.population) >= -2.0 - 1e-6).all()
+    assert (np.asarray(r1.population) <= 2.0 + 1e-6).all()
+    np.testing.assert_allclose(np.asarray(r1.x), np.full(2, [2.0, -2.0]),
+                               atol=1e-2)
+    np.testing.assert_array_equal(np.asarray(r1.x), np.asarray(r2.x))
+    rs = de_multi_seed(cost, bounds, seeds=[3], maxiter=80)
+    np.testing.assert_array_equal(np.asarray(rs[0].x), np.asarray(r1.x))
 
 
 # ---------------------------------------------------------------------------

@@ -29,6 +29,20 @@ def main() -> None:
     small = 2 if args.quick else 3
     maxiter = 150 if args.quick else 300
 
+    def measured():
+        # subprocess: the measured sweep must force its device pool
+        # before jax initializes, which this process already did
+        import subprocess
+        import sys
+        cmd = [sys.executable, "-m", "benchmarks.measured_sweep"]
+        cmd += ["--quick"] if args.quick else ["--trials", "1500"]
+        r = subprocess.run(cmd, cwd=os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), capture_output=True, text=True)
+        print(r.stdout[-4000:])
+        if r.returncode != 0:
+            raise RuntimeError(r.stderr[-2000:])
+        return {"see": "benchmarks/MEASURED_SWEEP.md"}
+
     jobs = {
         "table2": lambda: tables.table2_fit(seeds, maxiter),
         "table3": lambda: tables.table3_fit_l2(seeds, maxiter),
@@ -39,12 +53,15 @@ def main() -> None:
         "fig7": lambda: tables.fig7_lambda_sweep("jit", small, maxiter),
         "fig8": lambda: tables.fig8_coeff_paths("jit", small, maxiter),
         "roofline": roofline_fit,
+        "measured": measured,
     }
     only = [s for s in args.only.split(",") if s]
     results = {}
     for name, job in jobs.items():
         if only and name not in only:
             continue
+        if not only and name == "measured":
+            continue        # hours-long; opt in with --only measured
         t0 = time.time()
         try:
             results[name] = job()

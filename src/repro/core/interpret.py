@@ -1,4 +1,7 @@
-"""Interpretability reports — the paper's Tables 2/3/6 as text/CSV."""
+"""Interpretability reports — the paper's Tables 2/3/6 as text/CSV,
+plus the measured-vs-simulated residual report (docs/METHODOLOGY.md)
+that quantifies how far the α-β communication simulation sits from the
+real shard_map measurements the sweep records side-by-side."""
 from __future__ import annotations
 
 from typing import Dict, List, Sequence, Tuple
@@ -58,4 +61,62 @@ def scaling_report(model: PerfModel) -> str:
         verdict = ("ideal" if abs(m + 1) < 0.1 else
                    "super-linear" if m < -1.1 else "sub-optimal")
         lines.append(f"  {f:<20s} q = {m:+.3f} ± {s:.3f}   [{verdict}]")
+    return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Measured vs simulated (sweep rows with t_measured_sharded / t_simulated)
+# ---------------------------------------------------------------------------
+
+def _residual_stats(meas: np.ndarray, sim: np.ndarray) -> Dict[str, float]:
+    rel = (sim - meas) / np.maximum(np.abs(meas), 1e-9)
+    return {"n": int(len(meas)),
+            "mape": float(np.mean(np.abs(rel))),
+            "bias": float(np.mean(rel)),            # + = simulation slower
+            "median_meas_ms": float(np.median(meas)),
+            "median_sim_ms": float(np.median(sim))}
+
+
+def measured_vs_simulated(rows: Sequence[Dict],
+                          group_by: Sequence[str] = ("strategy",
+                                                     "n_devices")
+                          ) -> Dict[str, Dict[str, float]]:
+    """Residuals of the α-β simulation against the real shard_map step.
+
+    Consumes sweep row dicts carrying both ``t_simulated`` and
+    ``t_measured_sharded`` (rows without the measured column — e.g. from
+    a pool smaller than the trial — are skipped). Returns per-group
+    stats keyed by the joined ``group_by`` feature values, plus an
+    "overall" entry. ``bias`` is the mean signed relative error: positive
+    means the simulation predicts *slower* than reality.
+    """
+    ok = [r for r in rows if "error" not in r
+          and r.get("t_measured_sharded") is not None]
+    if not ok:
+        return {}
+    meas = np.array([r["t_measured_sharded"] for r in ok])
+    sim = np.array([r["t_simulated"] for r in ok])
+    out = {"overall": _residual_stats(meas, sim)}
+    keys = sorted({tuple(r["features"][g] for g in group_by) for r in ok})
+    for key in keys:
+        idx = [i for i, r in enumerate(ok)
+               if tuple(r["features"][g] for g in group_by) == key]
+        name = ",".join(f"{g}={v}" for g, v in zip(group_by, key))
+        out[name] = _residual_stats(meas[idx], sim[idx])
+    return out
+
+
+def residual_report(rows: Sequence[Dict],
+                    group_by: Sequence[str] = ("strategy", "n_devices")
+                    ) -> str:
+    """Human-readable measured-vs-simulated table (sweep rows)."""
+    stats = measured_vs_simulated(rows, group_by)
+    if not stats:
+        return "== measured vs simulated ==\n  (no rows with both columns)"
+    lines = ["== measured (shard_map) vs simulated (α-β) iteration time =="]
+    for name, s in stats.items():
+        lines.append(
+            f"  {name:<28s} n={s['n']:<5d} MAPE {s['mape']:6.1%} "
+            f"bias {s['bias']:+6.1%}  median meas {s['median_meas_ms']:8.2f}ms"
+            f" / sim {s['median_sim_ms']:8.2f}ms")
     return "\n".join(lines)

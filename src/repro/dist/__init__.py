@@ -13,16 +13,19 @@ term the fitted model must predict across.
 """
 from repro.dist.compression import (COMPRESSIONS, WIRE_BITS,
                                     compress_decompress, compress_tree,
-                                    compressed_psum_mean, dequantize_int8,
+                                    compressed_psum_mean,
+                                    compressed_psum_mean_ef, dequantize_int8,
                                     init_error_feedback, quantize_int8)
 from repro.dist.sharding import (BATCH, STRATEGIES, Strategy, batch_pspec,
-                                 logical_to_pspec, maybe_constrain,
-                                 param_pspecs, param_shardings)
+                                 gather_to_full, logical_to_pspec,
+                                 manual_mode, maybe_constrain, param_pspecs,
+                                 param_shardings, shard_of_full)
 
 __all__ = [
     "BATCH", "STRATEGIES", "Strategy", "batch_pspec", "logical_to_pspec",
     "maybe_constrain", "param_pspecs", "param_shardings",
+    "gather_to_full", "shard_of_full", "manual_mode",
     "COMPRESSIONS", "WIRE_BITS", "compress_decompress", "compress_tree",
-    "compressed_psum_mean", "dequantize_int8", "init_error_feedback",
-    "quantize_int8",
+    "compressed_psum_mean", "compressed_psum_mean_ef", "dequantize_int8",
+    "init_error_feedback", "quantize_int8",
 ]

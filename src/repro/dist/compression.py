@@ -14,6 +14,9 @@ in bits-per-value on the wire. This module owns that axis:
   * ``compressed_psum_mean`` — a shared-scale int8 all-reduce-mean usable
     inside ``shard_map`` (scale agreed via pmax, so every device
     quantizes onto the same grid and the integer psum is exact).
+  * ``compressed_psum_mean_ef`` — the same collective with per-device
+    error feedback: the quantization residual stays on the device that
+    incurred it and is folded into that device's *next* contribution.
   * ``compress_tree`` / ``init_error_feedback`` — pytree plumbing used by
     the train step; error-feedback buffers are ``Param`` leaves carrying
     the same logical axes as their parameter, so they inherit the
@@ -21,10 +24,31 @@ in bits-per-value on the wire. This module owns that axis:
 
 ``WIRE_BITS`` maps each mode to its bits-per-value — the numeric
 extrinsic feature the performance model fits a power law over.
+
+Invariants (property-tested in tests/test_substrate.py):
+
+  * int8 round-trip error is bounded elementwise by ``scale/2`` with
+    ``scale = max|x| / 127`` — one quantization ulp of the tensor.
+  * the shared-scale collective is *order-exact*: because every device
+    quantizes onto the grid agreed via ``pmax``, the integer ``psum``
+    commutes and the result is bit-identical regardless of reduction
+    order (unlike a float psum of separately-dequantized tensors).
+  * error feedback telescopes: over T steps the accumulated applied
+    update differs from the accumulated true gradient by exactly the
+    *final* residual, so the horizon error stays within one ulp of one
+    step no matter how large T grows (the residual never compounds).
+  * ``axis_name`` may be a single mesh-axis name or a tuple (e.g.
+    ``("pod", "data")``); scales and sums are then agreed over the
+    product of those axes.
+
+All collectives here must run inside ``shard_map`` (or ``pmap``) with the
+named axes bound; they are the *measured* communication path that the
+α-β simulation in ``repro.perf.sweep`` is validated against (see
+docs/METHODOLOGY.md).
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
+from typing import Any, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -75,14 +99,26 @@ def compress_decompress(g: jax.Array, mode: str,
                      f"have {COMPRESSIONS}")
 
 
-def compressed_psum_mean(x: jax.Array, axis_name: str,
+AxisNames = Union[str, Tuple[str, ...]]
+
+
+def compressed_psum_mean(x: jax.Array, axis_name: AxisNames,
                          mode: str = "int8") -> jax.Array:
     """All-reduce-mean of ``x`` over ``axis_name`` in the wire format.
 
     Must run inside ``shard_map`` (or pmap): the quantization grid is
     agreed across devices with a pmax of the local max-abs, so the
     integer sum is exact and only the shared scale carries rounding.
+    ``axis_name`` may be one mesh-axis name or a tuple of names; the
+    reduction then spans the product of those axes.
     """
+    if mode == "int8_ef":
+        # refuse rather than silently drop the residual: error feedback
+        # needs the (mean, new_err) pair threaded between steps
+        raise ValueError("int8_ef needs a residual buffer — use "
+                         "compressed_psum_mean_ef(x, axis_name, err)")
+    if mode not in ("none", "bf16", "int8"):
+        raise ValueError(f"unknown compression mode {mode!r}")
     n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
     xf = x.astype(jnp.float32)
     if mode == "none":
@@ -91,13 +127,37 @@ def compressed_psum_mean(x: jax.Array, axis_name: str,
         summed = jax.lax.psum(xf.astype(jnp.bfloat16).astype(jnp.float32),
                               axis_name)
         return (summed / n).astype(x.dtype)
-    if mode not in ("int8", "int8_ef"):
-        raise ValueError(f"unknown compression mode {mode!r}")
     scale = jax.lax.pmax(jnp.max(jnp.abs(xf)), axis_name) / 127.0
     q = jnp.clip(jnp.round(xf / jnp.where(scale > 0, scale, 1.0)),
                  -127, 127)
     summed = jax.lax.psum(q, axis_name) * scale
     return (summed / n).astype(x.dtype)
+
+
+def compressed_psum_mean_ef(x: jax.Array, axis_name: AxisNames,
+                            err: jax.Array
+                            ) -> Tuple[jax.Array, jax.Array]:
+    """Shared-scale int8 all-reduce-mean with per-device error feedback.
+
+    Each device folds its residual from the previous step into its local
+    contribution *before* quantizing, then keeps the new quantization
+    error locally: ``carried = x + err``, quantize on the pmax-agreed
+    grid, ``new_err = carried − dequantized``. The residual never crosses
+    the wire — only int8 values and one shared fp32 scale do — so the
+    wire format is identical to plain "int8"; what changes is that the
+    accumulated *applied* mean stays within one ulp of the accumulated
+    true mean at any horizon (the per-device residuals telescope).
+
+    Returns ``(mean, new_err)``; thread ``new_err`` into the next call.
+    """
+    n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+    carried = x.astype(jnp.float32) + err.astype(jnp.float32)
+    scale = jax.lax.pmax(jnp.max(jnp.abs(carried)), axis_name) / 127.0
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(carried / safe), -127, 127)
+    local_deq = q * scale
+    summed = jax.lax.psum(q, axis_name) * scale
+    return (summed / n).astype(x.dtype), carried - local_deq
 
 
 # ---------------------------------------------------------------------------

@@ -20,12 +20,38 @@ Two invariants hold for every resolved spec (property-tested):
     of the mesh axes assigned to it — otherwise the dim is left
     unsharded (e.g. a 50281-row vocab on a 16-wide model axis).
 
-Everything here is shape-arithmetic only: functions accept a concrete
-``Mesh``, an ``AbstractMesh``, or a plain ``{axis: size}`` mapping, so the
-rules are testable without a device pool.
+Everything in the resolution layer is shape-arithmetic only: functions
+accept a concrete ``Mesh``, an ``AbstractMesh``, or a plain
+``{axis: size}`` mapping, so the rules are testable without a device
+pool.
+
+Registry semantics (the contract docs/DIST.md documents in full):
+
+  * ``STRATEGIES[name].rules[logical]`` is an *ordered fallback list* of
+    candidates; the first candidate whose mesh axes are all present,
+    unused by an earlier dim of the same array, and divisibility-
+    compatible wins. ``rules["vocab"] = ("model", "data")`` therefore
+    means "model, else data" — joint 2-D sharding of one dim is written
+    as a nested tuple ``(("model", "data"),)``.
+  * Resolution is deterministic and per-array: the same (axes, shape,
+    mesh, strategy) always yields the same PartitionSpec, so shardings
+    computed from ``jax.eval_shape`` skeletons match the real arrays.
+  * A strategy never errors on a mesh that lacks its axes — missing axes
+    simply drop out, which is what lets one strategy string serve the
+    1-device CI mesh and the 512-chip pod.
+
+The module also owns the *manual-collectives* helpers used by the
+``shard_map`` train path (``repro.train.step.make_sharded_train_step``):
+``gather_to_full`` / ``shard_of_full`` invert a resolved PartitionSpec
+inside a ``shard_map`` body (all-gather a local block up to the full
+array; slice this device's block back out), and ``manual_mode`` disables
+``maybe_constrain`` while per-device code traces — sharding constraints
+are a GSPMD concept and must not leak into manually-partitioned code.
 """
 from __future__ import annotations
 
+import threading
+from contextlib import contextmanager
 from dataclasses import dataclass, field
 from typing import Dict, Mapping, Optional, Sequence, Tuple, Union
 
@@ -254,6 +280,8 @@ def maybe_constrain(x: jax.Array, *entries) -> jax.Array:
     so the same model code traces cleanly on a 1-CPU mesh and a
     512-chip (pod, data, model) mesh.
     """
+    if in_manual_mode():
+        return x
     mesh = active_mesh()
     if mesh is None:
         return x
@@ -282,3 +310,72 @@ def maybe_constrain(x: jax.Array, *entries) -> jax.Array:
         return x
     sharding = NamedSharding(mesh, P(*resolved))
     return jax.lax.with_sharding_constraint(x, sharding)
+
+
+# ---------------------------------------------------------------------------
+# Manual-collectives mode (shard_map bodies)
+# ---------------------------------------------------------------------------
+
+_MANUAL = threading.local()
+
+
+def in_manual_mode() -> bool:
+    return bool(getattr(_MANUAL, "depth", 0))
+
+
+@contextmanager
+def manual_mode():
+    """Disable ``maybe_constrain`` while tracing per-device code.
+
+    Inside a ``shard_map`` body every array is a local block and the
+    named mesh axes are bound as collective axes; a GSPMD
+    ``with_sharding_constraint`` against the global mesh is meaningless
+    there (and rejected by jax). Model code calls ``maybe_constrain``
+    unconditionally, so the sharded train step wraps its body in this
+    context while it traces. Thread-local and re-entrant.
+    """
+    _MANUAL.depth = getattr(_MANUAL, "depth", 0) + 1
+    try:
+        yield
+    finally:
+        _MANUAL.depth -= 1
+
+
+def spec_entries(spec: P, ndim: int) -> Tuple:
+    """PartitionSpec entries padded with None to ``ndim`` dims."""
+    entries = tuple(spec)
+    return entries + (None,) * (ndim - len(entries))
+
+
+def gather_to_full(x: jax.Array, spec: P) -> jax.Array:
+    """Inside ``shard_map``: all-gather a local block up to the full array.
+
+    ``spec`` is the PartitionSpec the array entered the shard_map with.
+    Multi-axis entries like ``("model", "data")`` are gathered minor axis
+    first so block order matches the major-axis-first layout GSPMD uses
+    for nested specs.
+    """
+    for dim, entry in enumerate(spec_entries(spec, x.ndim)):
+        if entry is None:
+            continue
+        for a in reversed(_axes_of(entry)):
+            x = jax.lax.all_gather(x, a, axis=dim, tiled=True)
+    return x
+
+
+def shard_of_full(x: jax.Array, spec: P, mesh: MeshLike) -> jax.Array:
+    """Inside ``shard_map``: slice this device's block back out of a full
+    array — the inverse of ``gather_to_full`` under the same spec."""
+    sizes = axis_sizes(mesh)
+    for dim, entry in enumerate(spec_entries(spec, x.ndim)):
+        if entry is None:
+            continue
+        axes = _axes_of(entry)
+        prod = 1
+        idx = jax.numpy.zeros((), "int32")
+        for a in axes:                       # major axis first
+            idx = idx * sizes[a] + jax.lax.axis_index(a)
+            prod *= sizes[a]
+        block = x.shape[dim] // prod
+        x = jax.lax.dynamic_slice_in_dim(x, idx * block, block, axis=dim)
+    return x

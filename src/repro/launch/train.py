@@ -4,7 +4,17 @@
       --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/run1
 
 Features exercised here (the production path in miniature):
-  * config → model → sharded train_step (jit with logical-rule shardings)
+  * config → model → sharded train_step, on one of two paths:
+      - "sharded": the measured multi-device path — a real ``shard_map``
+        step on the device pool, explicit all-gathers per strategy, and
+        the gradient all-reduce through the wire-compressed collective
+        (``repro.dist.compression.compressed_psum_mean``);
+      - "gspmd": jit with logical-rule shardings; XLA inserts the
+        collectives. The fallback for adafactor / indivisible batches.
+    ``--mode auto`` (default) picks "sharded" whenever it can.
+  * an 8-device placeholder pool is forced on CPU hosts (before the jax
+    backend initializes), so the default invocation exercises real
+    collectives; override with --devices N or an explicit XLA_FLAGS.
   * deterministic step-indexed data (resume-safe)
   * checkpoint/restart: atomic async checkpoints, auto-resume from latest
   * straggler detection via the fitted performance model when available
@@ -20,20 +30,20 @@ import json
 import os
 import time
 
-import jax
-import numpy as np
-
-from repro.configs import TrainConfig, get_config, reduced
-from repro.data import make_batch_for
-from repro.dist.sharding import STRATEGIES
-from repro.launch.mesh import make_mesh
-from repro.launch.specs import batch_shardings, state_shardings
-from repro.train import init_train_state, make_train_step
-from repro.train.checkpoint import CheckpointManager
-from repro.train.ft import StragglerDetector, plan_remesh
+DEFAULT_POOL = 8      # placeholder pool forced on single-CPU hosts
 
 
-def main(argv=None):
+def _force_host_pool(n: int) -> None:
+    """Request an n-device host platform pool. Must run before the first
+    jax backend touch; a pre-existing user flag always wins."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + f" --xla_force_host_platform_device_count={n}")
+
+
+def build_parser() -> argparse.ArgumentParser:
+    from repro.dist.sharding import STRATEGIES
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-360m")
     ap.add_argument("--reduced", action="store_true",
@@ -49,6 +59,13 @@ def main(argv=None):
                     choices=["none", "bf16", "int8", "int8_ef"])
     ap.add_argument("--strategy", default="fsdp_tp",
                     choices=sorted(STRATEGIES))
+    ap.add_argument("--mode", default="auto",
+                    choices=["auto", "sharded", "gspmd"],
+                    help="sharded = shard_map with measured collectives; "
+                         "gspmd = jit-with-shardings; auto prefers sharded")
+    ap.add_argument("--devices", type=int, default=0,
+                    help=f"host pool size to force on CPU (0 = auto: "
+                         f"{DEFAULT_POOL})")
     ap.add_argument("--remat", default="none")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=50)
@@ -57,7 +74,54 @@ def main(argv=None):
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--die-at-step", type=int, default=0,
                     help="fault-injection: crash at this step (FT test)")
-    args = ap.parse_args(argv)
+    ap.add_argument("--dry-run", action="store_true",
+                    help="print the execution plan as JSON and exit")
+    return ap
+
+
+def _pick_mode(args, tcfg, mesh, n_dev: int):
+    """(path, reason) — which step implementation this run uses."""
+    from repro.train import sharded_batch_ok
+    from repro.train.step import n_batch_shards
+    why_not = None
+    if n_dev <= 1:
+        why_not = "single device"
+    elif tcfg.optimizer == "adafactor":
+        why_not = "adafactor needs full-dim factored moments"
+    elif not sharded_batch_ok(mesh, args.batch):
+        why_not = (f"batch {args.batch} not divisible over the batch axes "
+                   f"of mesh {dict(mesh.shape)}")
+    elif (args.batch // n_batch_shards(mesh)) % args.microbatches != 0:
+        why_not = (f"per-device batch {args.batch // n_batch_shards(mesh)} "
+                   f"not divisible by {args.microbatches} microbatches")
+    if args.mode == "gspmd":
+        return "gspmd", "requested"
+    if args.mode == "sharded":
+        if why_not:
+            raise SystemExit(f"--mode sharded impossible: {why_not}")
+        return "sharded", "requested"
+    if why_not:
+        return "gspmd", f"auto fallback: {why_not}"
+    return "sharded", "auto"
+
+
+def main(argv=None):
+    args = build_parser().parse_args(argv)
+    _force_host_pool(args.devices or DEFAULT_POOL)
+
+    import jax
+    import numpy as np
+
+    from repro.configs import TrainConfig, get_config, reduced
+    from repro.data import make_batch_for
+    from repro.launch.mesh import make_mesh
+    from repro.launch.specs import batch_shardings, state_shardings
+    from repro.train import (init_sharded_train_state, init_train_state,
+                             make_sharded_train_step, make_train_step,
+                             sharded_state_shardings)
+    from repro.train.step import sharded_state_specs
+    from repro.train.checkpoint import CheckpointManager
+    from repro.train.ft import StragglerDetector, plan_remesh
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -72,11 +136,23 @@ def main(argv=None):
     n_dev = len(jax.devices())
     plan = plan_remesh(n_dev)
     mesh = make_mesh(plan.mesh_shape, ("data", "model"))
+    path, path_reason = _pick_mode(args, tcfg, mesh, n_dev)
     print(f"devices={n_dev} mesh={plan.mesh_shape} "
-          f"strategy={args.strategy} ({plan.reason})")
+          f"strategy={args.strategy} path={path} ({plan.reason}; "
+          f"{path_reason})")
+    if args.dry_run:
+        print(json.dumps({
+            "dry_run": True, "arch": cfg.name, "devices": n_dev,
+            "mesh": list(plan.mesh_shape), "strategy": args.strategy,
+            "compression": args.compression, "path": path,
+            "steps": args.steps, "batch": args.batch, "seq": args.seq}))
+        return {"dry_run": True, "path": path}
 
     key = jax.random.PRNGKey(args.seed)
-    state = init_train_state(key, cfg, tcfg)
+    if path == "sharded":
+        state = init_sharded_train_state(key, cfg, tcfg, mesh)
+    else:
+        state = init_train_state(key, cfg, tcfg)
     start_step = 0
     ckpt = None
     if args.ckpt_dir:
@@ -86,18 +162,30 @@ def main(argv=None):
             state, start_step = ckpt.restore(state)
             print(f"resumed from step {start_step}")
 
-    # Sharded step: params/opt-state/EF buffers follow the logical-rule
-    # pspecs of the chosen strategy, batch shards over the data axis. On
-    # one CPU device every spec degenerates to replicated and the same
-    # program runs unchanged.
-    st_shard = state_shardings(state, mesh, args.strategy)
-    b_shard = batch_shardings(
-        make_batch_for(cfg, args.batch, args.seq, step=0, seed=args.seed),
-        mesh)
+    example_batch = make_batch_for(cfg, args.batch, args.seq, step=0,
+                                   seed=args.seed)
+    if path == "sharded":
+        # Real shard_map step: params enter sharded per the strategy's
+        # logical-rule pspecs, are all-gathered in-body, and gradients
+        # all-reduce through the compressed collective (see
+        # repro.train.step.make_sharded_train_step).
+        st_specs = sharded_state_specs(cfg, tcfg, mesh, args.strategy)
+        st_shard = sharded_state_shardings(cfg, tcfg, mesh, args.strategy,
+                                           specs=st_specs)
+        step_raw = make_sharded_train_step(
+            cfg, tcfg, mesh, args.strategy,
+            microbatches=args.microbatches, state_specs=st_specs)
+    else:
+        # GSPMD step: all distribution via sharding annotations; on one
+        # CPU device every spec degenerates to replicated and the same
+        # program runs unchanged.
+        st_shard = state_shardings(state, mesh, args.strategy)
+        step_raw = make_train_step(cfg, tcfg,
+                                   microbatches=args.microbatches)
+    b_shard = batch_shardings(example_batch, mesh)
     # out_shardings pins the new state to the same specs, so the donated
     # state round-trips the jit boundary without a resharding mismatch.
-    step_fn = jax.jit(make_train_step(cfg, tcfg,
-                                      microbatches=args.microbatches),
+    step_fn = jax.jit(step_raw,
                       in_shardings=(st_shard, b_shard),
                       out_shardings=(st_shard, None),
                       donate_argnums=(0,))

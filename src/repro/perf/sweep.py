@@ -4,12 +4,25 @@ Per the paper (§IV.D): random-sample the Table-1 space, measure the time
 of a single training iteration (median of 3, after a warm-up/compile
 iteration), 1500 trials, 900 fit / 600 test.
 
-Container adaptation (DESIGN.md §5): the single-device compute time is
-*measured* on CPU with the per-device sub-batch (batch/n_devices); the
-data-parallel communication term is added from a deterministic α-β ring
-model (one physical core cannot exhibit real scaling). Every row records
-both the measured and the simulated component. The paper's framework axis
-(TF/MXNet/PyTorch) maps to execution modes {jit, jit_donate, eager}.
+With ``sharded=True`` (the ``benchmarks.measured_sweep`` entry point)
+every trial records *two* distributed iteration times side-by-side
+(docs/METHODOLOGY.md documents the full protocol):
+
+  * ``t_simulated`` — the container adaptation of the original design:
+    single-device compute time *measured* on the per-device sub-batch
+    (batch/n_devices) plus the data-parallel communication term from the
+    deterministic α-β ring model below;
+  * ``t_measured_sharded`` — the wall-clock median of a *real*
+    ``shard_map`` iteration over ``n_devices`` of the host device pool:
+    the global batch is sharded over a ``("data",)`` mesh, fsdp-style
+    parameter shards are all-gathered in-body, and the gradient
+    all-reduce-mean runs through the wire-compressed collective
+    (``repro.dist.compression.compressed_psum_mean``). The collectives
+    are real XLA collectives; on a CPU pool the devices timeshare cores,
+    which is exactly the measured-vs-simulated gap the fit reports.
+
+The paper's framework axis (TF/MXNet/PyTorch) maps to execution modes
+{jit, jit_donate, eager}.
 """
 from __future__ import annotations
 
@@ -21,6 +34,7 @@ from typing import Dict, List, Optional, Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.lenet5 import (ACTIVATIONS, BATCH_SIZES, DATASETS,
                                   DIST_STRATEGIES, DROPOUTS,
@@ -29,7 +43,8 @@ from repro.configs.lenet5 import (ACTIVATIONS, BATCH_SIZES, DATASETS,
                                   N_FILTERS, OPTIMIZERS, PADDING_MODES,
                                   POOL_SIZES, STRIDES)
 from repro.data.synthetic import lenet_batch
-from repro.dist.compression import WIRE_BITS
+from repro.dist.compression import WIRE_BITS, compressed_psum_mean
+from repro.dist.sharding import gather_to_full, shard_of_full
 from repro.models.lenet import init_lenet, lenet_loss
 from repro.perf.features import lenet_features
 
@@ -127,10 +142,107 @@ class SweepRow:
     comm_ms: float              # α-β simulated all-reduce time
     time_ms: float              # measured/n-scaled + comm  (fit target)
     param_bytes: int
+    # measured-vs-simulated pair (docs/METHODOLOGY.md): the α-β total and
+    # the wall-clock of the real shard_map step over n_devices (None when
+    # the host pool has fewer devices than the trial asks for).
+    t_simulated: float = 0.0
+    t_measured_sharded: Optional[float] = None
+
+
+def _fsdp_pspec(shape, n: int) -> P:
+    """ZeRO-style spec for an unannotated LeNet param: shard the first
+    dim divisible by the data-axis size; leave the rest replicated."""
+    for i, d in enumerate(shape):
+        if d % n == 0 and d >= n:
+            return P(*([None] * i + ["data"]))
+    return P()
+
+
+def make_sharded_iteration(cfg: LeNet5Config, mode: str, mesh: Mesh,
+                           params):
+    """One *real* distributed training iteration under ``shard_map``.
+
+    dp: params replicated, batch sharded over "data", gradients
+    all-reduce-meaned through the compressed collective. fsdp: params
+    additionally enter sharded (first divisible dim) and are
+    all-gathered in-body — the gather is the parameter traffic the α-β
+    fsdp model charges for; the optimizer then updates local shards.
+    """
+    from jax.experimental.shard_map import shard_map
+    from repro.models.layers import Param, is_param
+
+    n = mesh.shape["data"]
+    if cfg.strategy == "fsdp":
+        pspecs = jax.tree.map(lambda p: _fsdp_pspec(p.value.shape, n),
+                              params, is_leaf=is_param)
+    elif cfg.strategy == "dp":
+        pspecs = jax.tree.map(lambda p: P(), params, is_leaf=is_param)
+    else:
+        raise ValueError(f"no sharded iteration for {cfg.strategy!r}; "
+                         f"have {DIST_STRATEGIES}")
+
+    def body(params, batch, rng):
+        full = jax.tree.map(
+            lambda p, s: Param(gather_to_full(p.value, s), p.axes),
+            params, pspecs, is_leaf=is_param)
+        loss, grads = jax.value_and_grad(
+            lambda p, b, r: lenet_loss(p, b, cfg, r))(full, batch, rng)
+        grads = jax.tree.map(
+            lambda g: compressed_psum_mean(g, "data", cfg.compression),
+            grads)
+        grads = jax.tree.map(
+            lambda g, s: Param(shard_of_full(g.value, s, mesh), g.axes),
+            grads, pspecs, is_leaf=is_param)
+        if cfg.optimizer == "sgd":
+            new_params = _sgd_step(params, grads, cfg.learning_rate)
+        else:
+            m0 = jax.tree.map(jnp.zeros_like, params)
+            new_params, _, _ = _adam_step(params, grads, m0, m0,
+                                          cfg.learning_rate, 1)
+        return new_params, jax.lax.pmean(loss, "data")
+
+    it = shard_map(body, mesh=mesh,
+                   in_specs=(pspecs, P("data"), P()),
+                   out_specs=(pspecs, P()), check_rep=False)
+    if mode == "eager":
+        return it, pspecs
+    donate = (0,) if mode == "jit_donate" else ()
+    return jax.jit(it, donate_argnums=donate), pspecs
+
+
+def measure_sharded_trial(cfg: LeNet5Config, mode: str, *,
+                          n_iters: int = 3, seed: int = 0
+                          ) -> Optional[float]:
+    """Median wall-clock seconds of the global-batch shard_map iteration
+    over ``cfg.n_devices`` devices of the host pool; None if the pool is
+    too small (the caller records the row without the measured column)."""
+    devs = jax.devices()
+    if len(devs) < cfg.n_devices:
+        return None
+    key = jax.random.PRNGKey(seed)
+    mesh = Mesh(np.asarray(devs[:cfg.n_devices]), ("data",))
+    from repro.models.layers import is_param
+    params = init_lenet(key, cfg)
+    batch = lenet_batch(cfg, step=0, seed=seed, batch=cfg.batch_size)
+    it, pspecs = make_sharded_iteration(cfg, mode, mesh, params)
+    shardings = jax.tree.map(lambda p, s: NamedSharding(mesh, s), params,
+                             pspecs, is_leaf=is_param)
+    p = jax.device_put(params, shardings)
+    b = jax.device_put(batch, NamedSharding(mesh, P("data")))
+
+    p, _ = it(p, b, key)                          # warm-up / compile
+    jax.block_until_ready(p)
+    times = []
+    for i in range(n_iters):
+        t0 = time.perf_counter()
+        p, loss = it(p, b, key)
+        jax.block_until_ready(loss)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
 
 
 def measure_trial(cfg: LeNet5Config, mode: str, *, n_iters: int = 3,
-                  seed: int = 0) -> SweepRow:
+                  seed: int = 0, sharded: bool = False) -> SweepRow:
     key = jax.random.PRNGKey(seed)
     params = init_lenet(key, cfg)    # Param tree; tree ops map through
     per_dev = max(cfg.batch_size // cfg.n_devices, 1)
@@ -151,14 +263,30 @@ def measure_trial(cfg: LeNet5Config, mode: str, *, n_iters: int = 3,
     pb = sum(int(np.prod(x.shape)) * 4 for x in jax.tree.leaves(params))
     comm = comm_seconds(cfg.n_devices, pb, strategy=cfg.strategy,
                         wire_bits=WIRE_BITS[cfg.compression])
+    t_sim = measured * 1e3 + comm * 1e3
+    t_meas = None
+    # The sharded column is only meaningful compiled: a shard_map program
+    # dispatched op-by-op measures python dispatch x n_devices (~700x the
+    # compiled step on this host), not communication — so eager-mode rows
+    # keep t_measured_sharded=None and the jit/jit_donate rows cover
+    # every (strategy, compression, n_devices) cell.
+    if sharded and mode != "eager":
+        t_meas = measure_sharded_trial(cfg, mode, n_iters=n_iters,
+                                       seed=seed)
+        if t_meas is not None:
+            t_meas *= 1e3
     return SweepRow(features=lenet_features(cfg), mode=mode,
                     measured_ms=measured * 1e3, comm_ms=comm * 1e3,
-                    time_ms=measured * 1e3 + comm * 1e3, param_bytes=pb)
+                    time_ms=t_sim, param_bytes=pb,
+                    t_simulated=t_sim, t_measured_sharded=t_meas)
 
 
 def run_sweep(n_trials: int = 300, modes: Sequence[str] = MODES,
               seed: int = 0, out_path: Optional[str] = None,
-              verbose_every: int = 50) -> List[Dict]:
+              verbose_every: int = 50, sharded: bool = False) -> List[Dict]:
+    """``sharded=True`` (the benchmarks.measured_sweep entry point) adds
+    the real shard_map measurement per trial — roughly doubling trial
+    cost; simulated-only consumers keep the default off."""
     rng = np.random.default_rng(seed)
     rows: List[Dict] = []
     t0 = time.time()
@@ -166,7 +294,7 @@ def run_sweep(n_trials: int = 300, modes: Sequence[str] = MODES,
         cfg = sample_config(rng)
         mode = modes[i % len(modes)]
         try:
-            row = measure_trial(cfg, mode, seed=seed + i)
+            row = measure_trial(cfg, mode, seed=seed + i, sharded=sharded)
         except Exception as e:      # a pathological config; record & skip
             rows.append({"error": str(e), "mode": mode,
                          "features": lenet_features(cfg)})
@@ -185,7 +313,7 @@ def run_sweep(n_trials: int = 300, modes: Sequence[str] = MODES,
 REF_SAMPLES = 128     # fixed work unit for the fit target
 
 
-def fit_target_ms(row: Dict) -> float:
+def fit_target_ms(row: Dict, source: str = "simulated") -> float:
     """Fit target: time to process REF_SAMPLES samples at the sampled
     (batch, n_devices) — i.e. iteration time × (REF_SAMPLES / batch).
 
@@ -196,17 +324,33 @@ def fit_target_ms(row: Dict) -> float:
     1/batch and, under data parallelism with a fixed global batch, 1/n).
     Using raw per-iteration time of the *sub*-batch would leave almost no
     extrinsic signal on this hardware and degenerate the fit.
+
+    ``source`` picks the iteration time: "simulated" (per-device measured
+    compute + α-β comm, the container default) or "measured" (the real
+    shard_map step — raises if the row has no measured column).
     """
     b = row["features"]["batch_size"]
-    return (row["measured_ms"] + row["comm_ms"]) * REF_SAMPLES / b
+    if source == "measured":
+        t = row.get("t_measured_sharded")
+        if t is None:
+            raise ValueError("row has no t_measured_sharded "
+                             "(sweep ran without a device pool?)")
+    elif source == "simulated":
+        t = row["measured_ms"] + row["comm_ms"]
+    else:
+        raise ValueError(f"unknown fit-target source {source!r}")
+    return t * REF_SAMPLES / b
 
 
-def split_rows(rows: List[Dict], mode: str, n_fit: int = 900):
+def split_rows(rows: List[Dict], mode: str, n_fit: int = 900,
+               source: str = "simulated"):
     """Paper split: 900 fit / 600 test (scaled to available rows)."""
     ok = [r for r in rows if "error" not in r and r["mode"] == mode]
+    if source == "measured":
+        ok = [r for r in ok if r.get("t_measured_sharded") is not None]
     k = min(n_fit, int(len(ok) * 0.6))
     fit, test = ok[:k], ok[k:]
     f_s = [r["features"] for r in fit]
     f_t = [r["features"] for r in test]
-    return (f_s, [fit_target_ms(r) for r in fit],
-            f_t, [fit_target_ms(r) for r in test])
+    return (f_s, [fit_target_ms(r, source) for r in fit],
+            f_t, [fit_target_ms(r, source) for r in test])

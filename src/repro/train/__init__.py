@@ -1,6 +1,11 @@
 """Training/serving substrate: steps, checkpointing, fault tolerance."""
-from repro.train.step import TrainState, init_train_state, make_train_step
+from repro.train.step import (TrainState, init_sharded_train_state,
+                              init_train_state, make_sharded_train_step,
+                              make_train_step, sharded_batch_ok,
+                              sharded_state_shardings)
 from repro.train.serve import make_decode_step, make_prefill
 
 __all__ = ["TrainState", "init_train_state", "make_train_step",
+           "init_sharded_train_state", "make_sharded_train_step",
+           "sharded_batch_ok", "sharded_state_shardings",
            "make_prefill", "make_decode_step"]

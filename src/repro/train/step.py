@@ -1,10 +1,21 @@
 """Train step: loss → (micro-batched) grads → compression → clip → update.
 
-``make_train_step`` returns a pure function suitable for ``jax.jit`` with
-explicit in/out shardings; all distribution is expressed through sharding
-annotations (params/opt-state inherit logical-axis rules; batch shards
-over (pod, data)), so the same step runs on 1 CPU device and on the
-512-chip production mesh.
+Two execution paths share the same TrainState and numerics:
+
+* ``make_train_step`` — the GSPMD path: a pure function for ``jax.jit``
+  with explicit in/out shardings; all distribution is expressed through
+  sharding annotations (params/opt-state inherit logical-axis rules;
+  batch shards over (pod, data)) and XLA inserts the collectives.
+
+* ``make_sharded_train_step`` — the manual-collectives path: the same
+  step expressed with ``shard_map``, where every collective is written
+  out explicitly so it can be *measured* and *compressed*. Parameters
+  enter sharded per the strategy's PartitionSpecs, are all-gathered
+  in-body, per-device gradients are all-reduce-meaned over the batch
+  axes with ``repro.dist.compression.compressed_psum_mean`` (the wire-
+  compressed collective), and each device slices its shard back out and
+  applies the optimizer locally. This is the path the measured sweep
+  (docs/METHODOLOGY.md) times against the α-β simulation.
 """
 from __future__ import annotations
 
@@ -13,9 +24,15 @@ from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
-from repro.dist.compression import compress_tree, init_error_feedback
+from repro.dist.compression import (compress_tree, compressed_psum_mean,
+                                    compressed_psum_mean_ef,
+                                    init_error_feedback)
+from repro.dist.sharding import (BATCH_AXES, axis_sizes, gather_to_full,
+                                 manual_mode, param_pspecs, resolve_strategy,
+                                 shard_of_full)
 from repro.models import model as MD
 from repro.models.layers import Param, is_param, pvalues
 from repro.optim import clip_by_global_norm, make_optimizer, warmup_cosine
@@ -45,40 +62,51 @@ def _split_microbatches(batch: Dict[str, jax.Array], n: int):
     return jax.tree.map(split, batch)
 
 
-def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
-                    microbatches: int = 1):
-    """Returns train_step(state, batch) -> (state, metrics)."""
-    _, opt_update = make_optimizer(tcfg.optimizer)
-
+def _make_grad_fn(cfg: ModelConfig, tcfg: TrainConfig):
     def loss_for(params, mb):
         return MD.loss_fn(params, cfg, mb, remat=tcfg.remat_policy,
                           ce_impl=tcfg.ce_impl)
 
-    grad_fn = jax.value_and_grad(loss_for, has_aux=True)
+    return jax.value_and_grad(loss_for, has_aux=True)
+
+
+def _loss_and_grads(grad_fn, params, batch, microbatches: int):
+    """(loss, metrics, grads) with optional micro-batch accumulation.
+
+    With ``microbatches <= 1`` grads keep their Param wrappers; the
+    accumulated path returns raw fp32 arrays at the Param positions —
+    both shapes of tree are accepted downstream.
+    """
+    if microbatches <= 1:
+        (loss, metrics), grads = grad_fn(params, batch)
+        return loss, metrics, grads
+    mbs = _split_microbatches(batch, microbatches)
+    acc0 = jax.tree.map(
+        lambda p: jnp.zeros(p.value.shape, jnp.float32),
+        params, is_leaf=is_param)
+
+    def body(acc, mb):
+        (l, m), g = grad_fn(params, mb)
+        acc = jax.tree.map(
+            lambda a, gg: a + gg.astype(jnp.float32) / microbatches,
+            acc, pvalues(g))
+        return acc, (l, m)
+
+    grads_acc, (losses, mstack) = jax.lax.scan(body, acc0, mbs)
+    return losses.mean(), jax.tree.map(lambda x: x.mean(), mstack), grads_acc
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
+                    microbatches: int = 1):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+    _, opt_update = make_optimizer(tcfg.optimizer)
+    grad_fn = _make_grad_fn(cfg, tcfg)
 
     def train_step(state: TrainState, batch: Dict[str, jax.Array]
                    ) -> Tuple[TrainState, Dict[str, jax.Array]]:
         params = state.params
-
-        if microbatches <= 1:
-            (loss, metrics), grads = grad_fn(params, batch)
-        else:
-            mbs = _split_microbatches(batch, microbatches)
-            acc0 = jax.tree.map(
-                lambda p: jnp.zeros(p.value.shape, jnp.float32),
-                params, is_leaf=is_param)
-
-            def body(acc, mb):
-                (l, m), g = grad_fn(params, mb)
-                acc = jax.tree.map(
-                    lambda a, gg: a + gg.astype(jnp.float32) / microbatches,
-                    acc, pvalues(g))
-                return acc, (l, m)
-
-            grads_acc, (losses, mstack) = jax.lax.scan(body, acc0, mbs)
-            loss = losses.mean()
-            metrics = jax.tree.map(lambda x: x.mean(), mstack)
-            grads = grads_acc
+        loss, metrics, grads = _loss_and_grads(grad_fn, params, batch,
+                                               microbatches)
 
         # wire-format compression (numerics-exact w.r.t. a shared-scale
         # compressed all-reduce; see dist/compression.py)
@@ -97,3 +125,195 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
         return TrainState(new_params, new_opt, new_ef), metrics
 
     return train_step
+
+
+# ---------------------------------------------------------------------------
+# Manual-collectives (shard_map) path
+# ---------------------------------------------------------------------------
+
+def _mesh_batch_axes(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in BATCH_AXES if a in axis_sizes(mesh))
+
+
+def n_batch_shards(mesh) -> int:
+    sizes = axis_sizes(mesh)
+    n = 1
+    for a in _mesh_batch_axes(mesh):
+        n *= sizes[a]
+    return n
+
+
+def _batch_entry(mesh):
+    axes = _mesh_batch_axes(mesh)
+    return axes if len(axes) > 1 else axes[0]
+
+
+def _zip_params(f, params, *aligned):
+    """Map ``f(param_leaf, *aligned_leaves)`` over a Param tree, where each
+    aligned tree has one node (e.g. a PartitionSpec) per Param position."""
+    leaves, treedef = jax.tree_util.tree_flatten(params, is_leaf=is_param)
+    cols = [treedef.flatten_up_to(t) for t in aligned]
+    out = [f(leaf, *(c[i] for c in cols)) for i, leaf in enumerate(leaves)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def init_sharded_train_state(key, cfg: ModelConfig, tcfg: TrainConfig,
+                             mesh: Mesh) -> TrainState:
+    """Like ``init_train_state`` but with *per-device* error-feedback
+    buffers: each data-parallel rank keeps its own quantization residual
+    (that is what error feedback means — the residual belongs to the
+    device whose contribution was rounded), so EF leaves get a leading
+    ``n_batch_shards(mesh)`` dimension sharded over the batch axes."""
+    state = init_train_state(key, cfg, tcfg)
+    if state.ef is None:
+        return state
+    n = n_batch_shards(mesh)
+    ef = jax.tree.map(
+        lambda p: Param(jnp.zeros((n,) + tuple(p.value.shape), jnp.float32),
+                        (None,) + tuple(p.axes)),
+        state.params, is_leaf=is_param)
+    return TrainState(state.params, state.opt, ef)
+
+
+def sharded_state_specs(cfg: ModelConfig, tcfg: TrainConfig, mesh: Mesh,
+                        strategy) -> TrainState:
+    """PartitionSpec tree (TrainState-shaped) for the shard_map path.
+
+    Params/opt-moments follow the strategy's logical-rule pspecs; the
+    optimizer step scalar is replicated; EF buffers shard their leading
+    per-rank dimension over the batch axes and are otherwise replicated.
+    """
+    strat = resolve_strategy(strategy)
+    state_shapes = jax.eval_shape(
+        lambda: init_train_state(jax.random.PRNGKey(0), cfg, tcfg))
+
+    def pspecs(tree):
+        return None if tree is None else param_pspecs(tree, mesh, strat)
+
+    p_specs = pspecs(state_shapes.params)
+    opt = state_shapes.opt
+    opt_specs = OptState(P(), pspecs(opt.mu), pspecs(opt.nu))
+    ef_specs = None
+    if tcfg.grad_compression == "int8_ef":
+        ef_specs = jax.tree.map(lambda p: P(_batch_entry(mesh)),
+                                state_shapes.params, is_leaf=is_param)
+    return TrainState(p_specs, opt_specs, ef_specs)
+
+
+def sharded_state_shardings(cfg: ModelConfig, tcfg: TrainConfig, mesh: Mesh,
+                            strategy, specs: Optional[TrainState] = None
+                            ) -> TrainState:
+    """``sharded_state_specs`` wrapped as NamedShardings on ``mesh``.
+
+    Pass ``specs`` when already computed — the spec derivation traces
+    the full model/optimizer init under ``jax.eval_shape``."""
+    if specs is None:
+        specs = sharded_state_specs(cfg, tcfg, mesh, strategy)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def sharded_batch_ok(mesh, global_batch: int) -> bool:
+    """shard_map needs the batch evenly divided over the batch axes."""
+    return global_batch % n_batch_shards(mesh) == 0
+
+
+def make_sharded_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh: Mesh,
+                            strategy="dp", microbatches: int = 1,
+                            state_specs: Optional[TrainState] = None):
+    """The measured multi-device path: shard_map with explicit collectives.
+
+    Per step, on each device:
+
+      1. all-gather this device's parameter shards up to full arrays
+         (``gather_to_full`` inverts each param's PartitionSpec — for
+         ``dp`` params are replicated and no gather is emitted);
+      2. compute gradients of the *local* sub-batch (micro-batched if
+         asked);
+      3. all-reduce-mean the gradients over the batch axes through the
+         compressed collective (``compressed_psum_mean`` /
+         ``compressed_psum_mean_ef`` for int8 error feedback — the
+         residual stays on this device);
+      4. clip by the global norm of the full reduced gradient (identical
+         on every rank after the psum), slice each gradient back to this
+         device's shard, and apply the optimizer update locally — the
+         update is elementwise, so sharded params/moments stay sharded.
+
+    Tensor-model axes: the batch is replicated over ``model``, so every
+    model rank computes identical full gradients and only the *memory*
+    layout (and its gather traffic) differs per strategy — see
+    docs/METHODOLOGY.md for why this is the honest CPU-pool adaptation.
+
+    Restrictions: optimizer must be elementwise (adamw/sgd — adafactor's
+    factored moments take row/col means over dims this path shards), the
+    mesh must carry at least one batch axis, and the global batch must
+    divide evenly over it (``sharded_batch_ok``).
+    """
+    from jax.experimental.shard_map import shard_map
+
+    if tcfg.optimizer == "adafactor":
+        raise NotImplementedError(
+            "sharded path supports elementwise optimizers (adamw/sgd); "
+            "adafactor's factored moments need full-dim means")
+    batch_axes = _mesh_batch_axes(mesh)
+    if not batch_axes:
+        raise ValueError(f"mesh {dict(mesh.shape)} has no batch axis "
+                         f"({BATCH_AXES}); the gradient all-reduce needs one")
+    _, opt_update = make_optimizer(tcfg.optimizer)
+    grad_fn = _make_grad_fn(cfg, tcfg)
+    strat = resolve_strategy(strategy)
+    mode = tcfg.grad_compression
+
+    if state_specs is None:     # deriving specs traces the full init
+        state_specs = sharded_state_specs(cfg, tcfg, mesh, strat)
+    p_specs = state_specs.params
+
+    def body(state: TrainState, batch):
+        with manual_mode():
+            params = state.params
+            full_params = _zip_params(
+                lambda p, s: Param(gather_to_full(p.value, s), p.axes),
+                params, p_specs)
+            loss, metrics, grads = _loss_and_grads(grad_fn, full_params,
+                                                   batch, microbatches)
+            gvals = pvalues(grads) if microbatches <= 1 else grads
+
+            new_ef = state.ef
+            if mode == "int8_ef":
+                # pairs holds (mean, new_err) tuples at Param positions;
+                # always unzip against the params treedef so the tuples
+                # are never mistaken for pytree internals.
+                pairs = _zip_params(
+                    lambda p, g, e: compressed_psum_mean_ef(
+                        g.astype(jnp.float32), batch_axes, e.value[0]),
+                    params, gvals, state.ef)
+                reduced = _zip_params(lambda p, t: t[0], params, pairs)
+                new_ef = _zip_params(
+                    lambda p, t, e: Param(t[1][None], e.axes),
+                    params, pairs, state.ef)
+            else:
+                reduced = jax.tree.map(
+                    lambda g: compressed_psum_mean(g.astype(jnp.float32),
+                                                   batch_axes, mode),
+                    gvals)
+            loss = jax.lax.pmean(loss, batch_axes)
+            metrics = jax.tree.map(lambda m: jax.lax.pmean(m, batch_axes),
+                                   metrics)
+
+            reduced, gnorm = clip_by_global_norm(reduced, tcfg.grad_clip)
+            grads_shard = _zip_params(
+                lambda g, s, p: Param(shard_of_full(g, s, mesh), p.axes),
+                reduced, p_specs, params)
+            lr = warmup_cosine(state.opt.step, peak_lr=tcfg.learning_rate,
+                               warmup_steps=tcfg.warmup_steps,
+                               total_steps=tcfg.total_steps)
+            new_params, new_opt = opt_update(params, grads_shard, state.opt,
+                                             tcfg, lr)
+            metrics = dict(metrics)
+            metrics.update(grad_norm=gnorm, lr=lr, loss=loss)
+            return TrainState(new_params, new_opt, new_ef), metrics
+
+    return shard_map(body, mesh=mesh,
+                     in_specs=(state_specs, P(_batch_entry(mesh))),
+                     out_specs=(state_specs, P()),
+                     check_rep=False)

@@ -1,0 +1,201 @@
+"""Docs CI: fail on broken intra-repo links and un-importable code fences.
+
+  PYTHONPATH=src python tools/check_docs.py [files...]
+
+Checks, over README.md and docs/*.md (or the files given):
+
+1. **Links** — every relative markdown link `[text](path)` must resolve
+   to a file or directory in the repo (http(s)/mailto and pure #anchor
+   links are skipped; a `path#anchor` checks only the path part).
+2. **Python fences** — every ```python fence must compile, and its
+   import statements must actually import (run in one batch subprocess
+   with PYTHONPATH=src). Fences tagged ```python no-check are skipped.
+3. **Command fences** — inside ``` / ```bash / ```sh / ```shell fences,
+   every quoted invocation of a module that supports it (repro.launch.*,
+   benchmarks.measured_sweep) is executed for real with `--dry-run`
+   appended — a doctest-style smoke that documented commands keep
+   parsing and planning. Other in-repo `python -m pkg.mod` lines are
+   checked for importability; third-party entry points
+   (`pip`/`pytest`/...) and comment lines are ignored.
+
+Exit code 0 = all good; 1 = failures (each printed with file:line).
+"""
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+LINK_RE = re.compile(r"\[[^\]^\[]*\]\(([^)\s]+)\)")
+FENCE_RE = re.compile(r"^```(\S*)\s*(.*)$")
+
+# modules whose documented commands accept --dry-run (doctest smoke)
+DRY_RUNNABLE = ("repro.launch.train", "repro.launch.serve",
+                "benchmarks.measured_sweep")
+CMD_TIMEOUT = 240
+
+
+def default_files():
+    files = [os.path.join(REPO, "README.md")]
+    docs = os.path.join(REPO, "docs")
+    if os.path.isdir(docs):
+        files += sorted(os.path.join(docs, f) for f in os.listdir(docs)
+                        if f.endswith(".md"))
+    return files
+
+
+def iter_fences(lines):
+    """Yield (lang, tag, start_line, fence_lines)."""
+    i = 0
+    while i < len(lines):
+        m = FENCE_RE.match(lines[i])
+        if m:
+            lang, tag = m.group(1).lower(), m.group(2)
+            body, start = [], i + 1
+            i += 1
+            while i < len(lines) and not lines[i].startswith("```"):
+                body.append(lines[i])
+                i += 1
+            yield lang, tag, start, body
+        i += 1
+
+
+def check_links(path, text, errors):
+    rel_dir = os.path.dirname(path)
+    for ln, line in enumerate(text.splitlines(), 1):
+        for target in LINK_RE.findall(line):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            target = target.split("#")[0]
+            if not target:          # pure in-page anchor
+                continue
+            cand = os.path.normpath(os.path.join(rel_dir, target))
+            if not os.path.exists(cand):
+                errors.append(f"{path}:{ln}: broken link -> {target}")
+
+
+def _join_continuations(body):
+    """Merge backslash-continued shell lines into single commands."""
+    out, cur = [], ""
+    for line in body:
+        line = line.rstrip()
+        if line.endswith("\\"):
+            cur += line[:-1] + " "
+        else:
+            out.append(cur + line)
+            cur = ""
+    if cur:
+        out.append(cur)
+    return out
+
+
+def check_python_fence(path, start, body, errors, import_lines):
+    import ast
+    src = "\n".join(body)
+    try:
+        tree = ast.parse(src, f"{path}:{start}")
+    except SyntaxError as e:
+        errors.append(f"{path}:{start}: python fence does not compile: {e}")
+        return
+    for node in ast.walk(tree):
+        where = f"{path}:{start + getattr(node, 'lineno', 1)}"
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                import_lines.append((where, f"import {a.name}"))
+        elif isinstance(node, ast.ImportFrom) and node.level == 0 \
+                and node.module:
+            names = ", ".join(a.name for a in node.names)
+            import_lines.append(
+                (where, f"from {node.module} import {names}"))
+
+
+def check_command_fence(path, start, body, errors):
+    for cmd in _join_continuations(body):
+        cmd = re.sub(r"\s+#.*$", "", cmd).strip()   # trailing comment
+        if not cmd or cmd.startswith("#"):
+            continue
+        m = re.search(r"python(?:3)?\s+-m\s+([A-Za-z_][\w.]*)", cmd)
+        if not m:
+            continue
+        module = m.group(1)
+        if module.startswith(DRY_RUNNABLE):
+            run = re.sub(r"^\s*PYTHONPATH=\S+\s+", "", cmd)
+            if "--dry-run" not in run:
+                run += " --dry-run"
+            env = {**os.environ,
+                   "PYTHONPATH": SRC + os.pathsep +
+                   os.environ.get("PYTHONPATH", "")}
+            try:
+                r = subprocess.run(
+                    run, shell=True, cwd=REPO, env=env,
+                    capture_output=True, text=True, timeout=CMD_TIMEOUT)
+            except subprocess.TimeoutExpired:
+                errors.append(f"{path}:{start}: command timed out: {run}")
+                continue
+            if r.returncode != 0:
+                errors.append(f"{path}:{start}: documented command failed "
+                              f"({run}):\n{r.stderr[-800:]}")
+        elif module.split(".")[0] in ("repro", "benchmarks", "tools"):
+            # in-repo module: at least it must import. third-party
+            # entry points (pytest, pip, ...) are out of scope — the
+            # docs env does not install test extras.
+            r = subprocess.run(
+                [sys.executable, "-c", f"import {module}"],
+                env={**os.environ, "PYTHONPATH": SRC + os.pathsep +
+                     os.environ.get("PYTHONPATH", "")},
+                cwd=REPO, capture_output=True, text=True, timeout=120)
+            if r.returncode != 0:
+                errors.append(f"{path}:{start}: documented module "
+                              f"{module} does not import:\n"
+                              f"{r.stderr[-500:]}")
+
+
+def check_imports(import_lines, errors):
+    if not import_lines:
+        return
+    prog = "\n".join(line for _, line in import_lines)
+    env = {**os.environ, "PYTHONPATH": SRC + os.pathsep +
+           os.environ.get("PYTHONPATH", "")}
+    r = subprocess.run([sys.executable, "-c", prog], env=env, cwd=REPO,
+                       capture_output=True, text=True, timeout=180)
+    if r.returncode != 0:
+        # bisect: run one by one to name the culprit line
+        for where, line in import_lines:
+            r1 = subprocess.run([sys.executable, "-c", line], env=env,
+                                cwd=REPO, capture_output=True, text=True,
+                                timeout=120)
+            if r1.returncode != 0:
+                errors.append(f"{where}: fence import fails: {line!r}:\n"
+                              f"{r1.stderr[-500:]}")
+
+
+def main(argv=None):
+    files = [os.path.abspath(f) for f in (argv or sys.argv[1:])] \
+        or default_files()
+    errors, import_lines = [], []
+    for path in files:
+        text = open(path).read()
+        check_links(path, text, errors)
+        lines = text.splitlines()
+        for lang, tag, start, body in iter_fences(lines):
+            if lang == "python" and "no-check" not in tag:
+                check_python_fence(path, start, body, errors, import_lines)
+            elif lang in ("", "bash", "sh", "shell"):
+                check_command_fence(path, start, body, errors)
+    check_imports(import_lines, errors)
+    rel = [os.path.relpath(f, REPO) for f in files]
+    if errors:
+        print(f"[check_docs] {len(errors)} problem(s) in {', '.join(rel)}:")
+        for e in errors:
+            print(" -", e)
+        return 1
+    print(f"[check_docs] OK: {', '.join(rel)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -28,9 +28,12 @@ BATCH_SIZES = (8, 16, 32, 64, 128)
 # Distribution extrinsics beyond the paper's table: the sharding strategy
 # and gradient wire format both reshape the communication term (the axis
 # Shi 1711.05979 / Ulanov 1610.06276 show dominates distributed scaling).
-# Strategies here are the ones meaningful for a small conv net; the full
-# registry lives in repro.dist.sharding.STRATEGIES.
-DIST_STRATEGIES = ("dp", "fsdp")
+# The full registry (repro.dist.sharding.STRATEGIES) is sampled: every
+# strategy has a communication schedule in repro.perf.costmodel, so every
+# sampled row gets a finite simulated comm time (tested in
+# tests/test_costmodel.py), and the sweep's shard_map path measures each
+# on its own mesh (tp-family meshes carry a "model" axis).
+DIST_STRATEGIES = ("dp", "fsdp", "tp", "fsdp_tp")
 GRAD_COMPRESSIONS = ("none", "bf16", "int8")   # wire bits 32 / 16 / 8
 
 DATASET_SHAPES = {

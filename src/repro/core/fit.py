@@ -93,6 +93,27 @@ def fit_model(spec: FeatureSpec, samples: Sequence[Dict],
     return FitResult(model, train_m, test_m, costs, fit_s, backend)
 
 
+def fit_sweep_rows(spec: FeatureSpec, rows: Sequence[Dict], mode: str,
+                   source: str = "simulated", *,
+                   seeds: Sequence[int] = tuple(range(6)),
+                   maxiter: int = 300, reg: str = "l2",
+                   lam: float = 1e-3) -> Tuple[FitResult, int, int]:
+    """Fit the generic model against one sweep target — the shared entry
+    point of ``benchmarks.measured_sweep`` and the calibration pipeline.
+
+    ``rows`` are sweep-row dicts (``repro.perf.sweep``); ``source`` picks
+    the fit target per row ("simulated" uses `measured_ms + comm_ms`, so
+    feeding rows re-priced by ``repro.perf.costmodel.resimulate_rows``
+    fits against the *calibrated* simulation; "measured" uses the real
+    shard_map column). Returns (FitResult, n_fit, n_test).
+    """
+    from repro.perf.sweep import split_rows
+    f_s, t_s, f_t, t_t = split_rows(rows, mode, source=source)
+    r = fit_model(spec, f_s, t_s, test_samples=f_t, test_times=t_t,
+                  reg=reg, lam=lam, seeds=tuple(seeds), maxiter=maxiter)
+    return r, len(f_s), len(f_t)
+
+
 def lambda_sweep(spec: FeatureSpec, samples, times, test_samples, test_times,
                  *, reg: str, lams: Sequence[float],
                  seeds=tuple(range(3)), maxiter=200) -> List[Tuple[float,

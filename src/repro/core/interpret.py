@@ -4,7 +4,7 @@ that quantifies how far the α-β communication simulation sits from the
 real shard_map measurements the sweep records side-by-side."""
 from __future__ import annotations
 
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -119,4 +119,61 @@ def residual_report(rows: Sequence[Dict],
             f"  {name:<28s} n={s['n']:<5d} MAPE {s['mape']:6.1%} "
             f"bias {s['bias']:+6.1%}  median meas {s['median_meas_ms']:8.2f}ms"
             f" / sim {s['median_sim_ms']:8.2f}ms")
+    return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Calibrated vs default simulation (repro.perf.costmodel)
+# ---------------------------------------------------------------------------
+
+def calibration_comparison(rows: Sequence[Dict], calibration,
+                           group_by: Sequence[str] = ("strategy",
+                                                      "n_devices"),
+                           *, rows_default: Optional[Sequence[Dict]] = None,
+                           rows_calibrated: Optional[Sequence[Dict]] = None
+                           ) -> Dict[str, Dict[str, Dict[str, float]]]:
+    """Residual stats of the simulation before/after a calibration.
+
+    "before" prices every row's communication schedule with the default
+    link constants; "after" re-prices it with the fitted ``calibration``
+    (``repro.perf.costmodel.Calibration``). Rows are re-simulated from
+    their own schedule inputs either way, so the comparison is apples-
+    to-apples even on rows that were originally written under a
+    different link. Callers that already re-simulated (e.g. for fitting)
+    pass the lists via ``rows_default`` / ``rows_calibrated`` to skip
+    the duplicate schedule pricing. Returns ``{group: {"default": stats,
+    "calibrated": stats}}`` with the same group keys as
+    ``measured_vs_simulated``.
+    """
+    from repro.perf.costmodel import DEFAULT_CALIBRATION, resimulate_rows
+    if rows_default is None:
+        rows_default = resimulate_rows(rows, DEFAULT_CALIBRATION)
+    if rows_calibrated is None:
+        rows_calibrated = resimulate_rows(rows, calibration)
+    before = measured_vs_simulated(rows_default, group_by)
+    after = measured_vs_simulated(rows_calibrated, group_by)
+    return {g: {"default": before[g], "calibrated": after[g]}
+            for g in before if g in after}
+
+
+def calibration_report(rows: Sequence[Dict], calibration,
+                       group_by: Sequence[str] = ("strategy", "n_devices"),
+                       *, rows_default: Optional[Sequence[Dict]] = None,
+                       rows_calibrated: Optional[Sequence[Dict]] = None
+                       ) -> str:
+    """Before/after table: default constants vs calibrated link."""
+    cmp = calibration_comparison(rows, calibration, group_by,
+                                 rows_default=rows_default,
+                                 rows_calibrated=rows_calibrated)
+    if not cmp:
+        return ("== calibrated vs default simulation ==\n"
+                "  (no rows with both columns)")
+    label = getattr(calibration, "label", "calibrated")
+    lines = [f"== simulation residuals: default link vs {label} =="]
+    for name, pair in cmp.items():
+        d, c = pair["default"], pair["calibrated"]
+        lines.append(
+            f"  {name:<28s} n={d['n']:<5d} "
+            f"MAPE {d['mape']:6.1%} -> {c['mape']:6.1%}   "
+            f"bias {d['bias']:+6.1%} -> {c['bias']:+6.1%}")
     return "\n".join(lines)

@@ -62,7 +62,17 @@ WIRE_BITS = {"none": 32, "bf16": 16, "int8": 8, "int8_ef": 8}
 
 
 def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
-    """Symmetric max-abs quantization -> (int8 values, fp32 scale)."""
+    """Symmetric max-abs quantization -> (int8 values, fp32 scale).
+
+    On TPU the codec runs as Pallas kernels (``repro.kernels.quantize``,
+    numerics-identical — equivalence-tested in tests/test_kernels.py);
+    elsewhere the jnp path below. ``REPRO_DISABLE_PALLAS=1`` forces the
+    jnp path for A/B runs, same switch as the attention/SSD kernels.
+    """
+    from repro.kernels.ops import use_pallas
+    if use_pallas():
+        from repro.kernels.quantize import quantize_int8_pallas
+        return quantize_int8_pallas(x)
     xf = x.astype(jnp.float32)
     scale = jnp.max(jnp.abs(xf)) / 127.0
     q = jnp.round(xf / jnp.where(scale > 0, scale, 1.0))
@@ -71,6 +81,10 @@ def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
 
 
 def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    from repro.kernels.ops import use_pallas
+    if use_pallas():
+        from repro.kernels.quantize import dequantize_int8_pallas
+        return dequantize_int8_pallas(q, scale)
     return q.astype(jnp.float32) * scale
 
 

@@ -138,6 +138,68 @@ def resolve_strategy(strategy: Union[str, Strategy]) -> Strategy:
 
 
 # ---------------------------------------------------------------------------
+# Per-strategy collective descriptions (consumed by the cost model)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class CollectiveDesc:
+    """One abstract collective a strategy issues per training iteration.
+
+    This is the *shape* of the strategy's communication — which ring
+    primitive moves which tensor class over which mesh axis, how many
+    times — with no sizes attached. ``repro.perf.costmodel.schedules``
+    binds it to concrete byte counts and per-axis device counts; the
+    measured shard_map paths (``repro.train.step`` and the LeNet sweep)
+    are the executable counterparts it abstracts.
+
+      op      ring primitive name (repro.perf.costmodel.primitives)
+      tensor  what moves: "grad" (wire-compressed), "param" (fp32 wire),
+              or "act" (activations, batch-sharded over the data axis)
+      axis    mesh axis the ring spans: "data" or "model"
+      count   occurrences per iteration (e.g. fsdp all-gathers params
+              once forward + once backward)
+    """
+    op: str
+    tensor: str
+    axis: str
+    count: int = 1
+
+
+# The canonical per-iteration schedules (docs/DIST.md spells out the
+# provenance of each term):
+#   dp       ring all-reduce of the wire-compressed gradients.
+#   fsdp     canonical ZeRO-3: all-gather the fp32 parameter shards for
+#            forward and again for backward, reduce-scatter compressed
+#            gradients back to their owners.
+#   tp       Megatron: two activation all-reduces forward and two
+#            backward per tensor-parallel block (the g/ḡ operators);
+#            parameter gradients stay local to their model-axis shard.
+#   fsdp_tp  the 2-D mesh decomposed per axis: each model rank ZeRO-
+#            shards its 1/|model| parameter slice over data (same
+#            gather/scatter pattern as fsdp at 1/|model| volume), while
+#            the model axis carries the Megatron activation all-reduces.
+STRATEGY_COLLECTIVES: Dict[str, Tuple[CollectiveDesc, ...]] = {
+    "dp": (
+        CollectiveDesc("all_reduce", "grad", "data"),
+    ),
+    "fsdp": (
+        CollectiveDesc("all_gather", "param", "data", count=2),
+        CollectiveDesc("reduce_scatter", "grad", "data"),
+    ),
+    "tp": (
+        CollectiveDesc("all_reduce", "act", "model", count=4),
+    ),
+    "fsdp_tp": (
+        CollectiveDesc("all_gather", "param", "data", count=2),
+        CollectiveDesc("reduce_scatter", "grad", "data"),
+        CollectiveDesc("all_reduce", "act", "model", count=4),
+    ),
+}
+assert set(STRATEGY_COLLECTIVES) == set(STRATEGIES), \
+    "every registry strategy needs a collective description"
+
+
+# ---------------------------------------------------------------------------
 # Mesh introspection
 # ---------------------------------------------------------------------------
 

@@ -74,9 +74,46 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--die-at-step", type=int, default=0,
                     help="fault-injection: crash at this step (FT test)")
+    ap.add_argument("--report-comm", action="store_true",
+                    help="estimate per-step collective time from the "
+                         "calibrated cost model (repro.perf.costmodel) "
+                         "and include it in the plan output")
     ap.add_argument("--dry-run", action="store_true",
                     help="print the execution plan as JSON and exit")
     return ap
+
+
+def _comm_estimate(cfg, args, n_dev: int):
+    """Schedule-level collective estimate for the run's strategy, priced
+    by the same calibrated link the sweep simulation loads."""
+    import jax
+    import numpy as np
+
+    from repro.dist.compression import WIRE_BITS
+    from repro.models import model as MD
+    from repro.perf.costmodel import (ScheduleInputs, describe_schedule,
+                                      load_calibration, mesh_axes_for,
+                                      strategy_comm_seconds)
+
+    skeleton = jax.eval_shape(
+        lambda: MD.init_model(jax.random.PRNGKey(0), cfg))
+    param_bytes = sum(int(np.prod(x.shape)) * x.dtype.itemsize
+                      for x in jax.tree.leaves(skeleton))
+    # activations at the tp block boundaries: one [batch, seq, d_model]
+    # fp32 tensor per layer (what Megatron-style schedules all-reduce)
+    act_bytes = 4 * args.batch * args.seq * cfg.d_model * cfg.n_layers
+    inp = ScheduleInputs(n_devices=n_dev, param_bytes=param_bytes,
+                         wire_bits=WIRE_BITS[args.compression],
+                         act_bytes=act_bytes)
+    cal = load_calibration()
+    return {"calibration": cal.label,
+            "strategy": args.strategy,
+            "mesh_axes": mesh_axes_for(args.strategy, n_dev),
+            "param_bytes": param_bytes,
+            "act_bytes": act_bytes,
+            "per_step_ms": strategy_comm_seconds(
+                args.strategy, inp, cal.links()) * 1e3,
+            "schedule": describe_schedule(args.strategy, inp, cal.links())}
 
 
 def _pick_mode(args, tcfg, mesh, n_dev: int):
@@ -140,13 +177,20 @@ def main(argv=None):
     print(f"devices={n_dev} mesh={plan.mesh_shape} "
           f"strategy={args.strategy} path={path} ({plan.reason}; "
           f"{path_reason})")
+    comm = _comm_estimate(cfg, args, n_dev) if args.report_comm else None
+    if comm is not None:
+        print(f"comm estimate [{comm['calibration']}]: "
+              f"{comm['per_step_ms']:.3f} ms/step over "
+              f"{comm['mesh_axes']}")
     if args.dry_run:
-        print(json.dumps({
-            "dry_run": True, "arch": cfg.name, "devices": n_dev,
-            "mesh": list(plan.mesh_shape), "strategy": args.strategy,
-            "compression": args.compression, "path": path,
-            "steps": args.steps, "batch": args.batch, "seq": args.seq}))
-        return {"dry_run": True, "path": path}
+        out = {"dry_run": True, "arch": cfg.name, "devices": n_dev,
+               "mesh": list(plan.mesh_shape), "strategy": args.strategy,
+               "compression": args.compression, "path": path,
+               "steps": args.steps, "batch": args.batch, "seq": args.seq}
+        if comm is not None:
+            out["comm"] = comm
+        print(json.dumps(out))
+        return {"dry_run": True, "path": path, "comm": comm}
 
     key = jax.random.PRNGKey(args.seed)
     if path == "sharded":

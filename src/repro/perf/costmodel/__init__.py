@@ -1,0 +1,36 @@
+"""Calibrated collective cost model.
+
+Three layers (docs/METHODOLOGY.md §Calibration):
+
+  primitives  α-β ring collectives parameterized by ``LinkParams``
+  schedules   per-strategy schedules composed from the primitives,
+              bound to the collective descriptions the distribution
+              substrate exposes (``repro.dist.sharding``)
+  calibrate   fits LinkParams from measured residuals (DE), serializes
+              the calibration JSON every simulation consumer loads
+
+Replaces the hard-coded two-constant ring model that used to live in
+``repro.perf.sweep`` and covers all four registry strategies.
+"""
+from repro.perf.costmodel.calibrate import (Calibration,
+                                            DEFAULT_CALIBRATION,
+                                            default_calibration_path,
+                                            fit_calibration,
+                                            load_calibration,
+                                            resimulate_rows)
+from repro.perf.costmodel.primitives import (COLLECTIVES, DEFAULT_LINK,
+                                             CollectiveCall, LinkParams,
+                                             collective_seconds,
+                                             schedule_seconds)
+from repro.perf.costmodel.schedules import (ScheduleInputs, build_schedule,
+                                            describe_schedule, mesh_axes_for,
+                                            strategy_comm_seconds)
+
+__all__ = [
+    "COLLECTIVES", "DEFAULT_LINK", "DEFAULT_CALIBRATION",
+    "Calibration", "CollectiveCall", "LinkParams", "ScheduleInputs",
+    "build_schedule", "collective_seconds", "default_calibration_path",
+    "describe_schedule", "fit_calibration", "load_calibration",
+    "mesh_axes_for", "resimulate_rows", "schedule_seconds",
+    "strategy_comm_seconds",
+]

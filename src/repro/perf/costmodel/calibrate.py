@@ -1,0 +1,351 @@
+"""Fit link parameters from measured residuals; serialize the calibration.
+
+The measured sweep (PR 2) records, per trial, both the real shard_map
+iteration time (``t_measured_sharded``) and the single-device compute
+time of the per-device sub-batch (``measured_ms``). Their difference is
+everything the compute term does not explain — collective traffic plus
+container overhead — and it is exactly the quantity the α-β schedule
+layer claims to predict:
+
+    residual_s(row) ≈ Σ_op hops_op·α_op + volume_op / bw_op
+
+The right-hand side is *linear* in each link's (α, 1/bw) once the
+schedule is reduced to per-collective coefficients
+(``primitives.schedule_coefficients``), so calibration precomputes one
+small (hops, volume) matrix over the rows and fits ``LinkParams`` with
+the repo's differential evolution (``repro.core.de``) over log-spaced
+bounds — globally, and optionally per collective kind. MAE is the cost,
+matching the paper's DE objective and staying robust to the negative
+residuals a timeshared CPU pool produces.
+
+The result is serialized to JSON (schema in docs/METHODOLOGY.md) and
+loaded back by every consumer of the simulation — ``repro.perf.sweep``,
+``benchmarks.measured_sweep``, and the train driver's ``--report-comm``
+— via ``load_calibration``, so they all price communication with the
+same link instead of private constants.
+
+CLI:
+
+  PYTHONPATH=src python -m repro.perf.costmodel.calibrate \
+      --rows benchmarks/artifacts/lenet_sweep_measured.json \
+      --out benchmarks/artifacts/comm_calibration.json --per-collective
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from dataclasses import dataclass, field
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.perf.costmodel.primitives import (COLLECTIVES, DEFAULT_LINK,
+                                             LinkParams, Links,
+                                             schedule_coefficients)
+from repro.perf.costmodel.schedules import (ScheduleInputs, build_schedule,
+                                            strategy_comm_seconds)
+
+SCHEMA_VERSION = 1
+
+# log10 search bounds: α ∈ [10ns, 10ms] per hop, bw ∈ [100 KB/s, 10 TB/s].
+LOG_ALPHA_BOUNDS = (-8.0, -2.0)
+LOG_BW_BOUNDS = (5.0, 13.0)
+
+ENV_VAR = "REPRO_CALIBRATION"      # path override; "" / "none" = defaults
+
+
+def default_calibration_path() -> str:
+    """The checked-in artifact fitted from the PR 2 measured sweep."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    repo = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.dirname(here))))
+    return os.path.join(repo, "benchmarks", "artifacts",
+                        "comm_calibration.json")
+
+
+@dataclass(frozen=True)
+class Calibration:
+    """A named set of link parameters the schedule layer prices with.
+
+    ``label`` flows into sweep rows (the ``calibration`` column) so every
+    simulated number is traceable to the link that produced it.
+    """
+    label: str = "default"
+    default: LinkParams = DEFAULT_LINK
+    per_collective: Optional[Mapping[str, LinkParams]] = None
+    meta: Mapping[str, object] = field(default_factory=dict)
+
+    def links(self) -> Links:
+        if not self.per_collective:
+            return self.default
+        return {**dict(self.per_collective), "default": self.default}
+
+    def to_dict(self) -> Dict:
+        return {"version": SCHEMA_VERSION, "label": self.label,
+                "default": self.default.to_dict(),
+                "per_collective": (
+                    None if not self.per_collective else
+                    {k: v.to_dict()
+                     for k, v in self.per_collective.items()}),
+                "meta": dict(self.meta)}
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "Calibration":
+        if int(d.get("version", 0)) != SCHEMA_VERSION:
+            raise ValueError(f"unsupported calibration schema version "
+                             f"{d.get('version')!r} (want {SCHEMA_VERSION})")
+        pc = d.get("per_collective") or None
+        return cls(label=str(d.get("label", "fitted")),
+                   default=LinkParams.from_dict(d["default"]),
+                   per_collective=(None if pc is None else
+                                   {k: LinkParams.from_dict(v)
+                                    for k, v in pc.items()}),
+                   meta=dict(d.get("meta", {})))
+
+    def save(self, path: str) -> None:
+        os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(self.to_dict(), f, indent=1)
+
+    @classmethod
+    def load(cls, path: str) -> "Calibration":
+        with open(path) as f:
+            return cls.from_dict(json.load(f))
+
+
+DEFAULT_CALIBRATION = Calibration()
+
+
+def load_calibration(path: Optional[str] = None) -> Calibration:
+    """Resolve the calibration every simulation consumer shares.
+
+    Order: explicit ``path`` → $REPRO_CALIBRATION ("" or "none" forces
+    the documented defaults) → the checked-in artifact → defaults.
+    """
+    if path is None:
+        env = os.environ.get(ENV_VAR)
+        if env is not None:
+            if env.strip().lower() in ("", "none", "default"):
+                return DEFAULT_CALIBRATION
+            return Calibration.load(env)
+        path = default_calibration_path()
+        if not os.path.exists(path):
+            return DEFAULT_CALIBRATION
+    return Calibration.load(path)
+
+
+# ---------------------------------------------------------------------------
+# Residual extraction
+# ---------------------------------------------------------------------------
+
+def row_inputs(row: Mapping) -> ScheduleInputs:
+    """ScheduleInputs of one sweep-row dict (old rows lack act_bytes)."""
+    f = row["features"]
+    return ScheduleInputs(n_devices=int(f["n_devices"]),
+                          param_bytes=int(row["param_bytes"]),
+                          wire_bits=int(f.get("wire_bits", 32)),
+                          act_bytes=int(row.get("act_bytes", 0)))
+
+
+def calibration_rows(rows: Sequence[Mapping]) -> List[Mapping]:
+    """Rows that constrain the link: a real sharded measurement exists
+    and at least one collective actually ran (n_devices > 1)."""
+    return [r for r in rows
+            if "error" not in r
+            and r.get("t_measured_sharded") is not None
+            and int(r["features"]["n_devices"]) > 1]
+
+
+def residual_matrices(rows: Sequence[Mapping]
+                      ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """(H, V, y): per-row hops/volume coefficients and residual seconds.
+
+    ``H[r, k]`` / ``V[r, k]`` are the accumulated ring hops and payload
+    volume of collective kind ``COLLECTIVES[k]`` in row r's schedule, so
+    any link assignment prices the whole dataset as ``H @ α + V @ (1/bw)``.
+    """
+    H = np.zeros((len(rows), len(COLLECTIVES)))
+    V = np.zeros((len(rows), len(COLLECTIVES)))
+    y = np.zeros(len(rows))
+    for i, r in enumerate(rows):
+        sched = build_schedule(r["features"]["strategy"], row_inputs(r))
+        for op, (h, v) in schedule_coefficients(sched).items():
+            k = COLLECTIVES.index(op)
+            H[i, k], V[i, k] = h, v
+        y[i] = (float(r["t_measured_sharded"])
+                - float(r["measured_ms"])) * 1e-3
+    return H, V, y
+
+
+def _fit_links(H: np.ndarray, V: np.ndarray, y: np.ndarray,
+               kinds: Sequence[str], *, seeds: Sequence[int],
+               maxiter: int) -> Tuple[Dict[str, LinkParams], float]:
+    """DE over log10 link params of ``kinds``; returns (links, mae_s)."""
+    import jax.numpy as jnp
+
+    from repro.core.de import de_multi_seed
+
+    idx = [COLLECTIVES.index(k) for k in kinds]
+    Hj = jnp.asarray(H[:, idx], jnp.float32)
+    Vj = jnp.asarray(V[:, idx], jnp.float32)
+    yj = jnp.asarray(y, jnp.float32)
+    m = len(kinds)
+
+    def cost(x):
+        alphas = 10.0 ** x[:m]
+        inv_bw = 10.0 ** (-x[m:])
+        pred = Hj @ alphas + Vj @ inv_bw
+        return jnp.mean(jnp.abs(pred - yj))
+
+    lo = np.array([LOG_ALPHA_BOUNDS[0]] * m + [LOG_BW_BOUNDS[0]] * m)
+    hi = np.array([LOG_ALPHA_BOUNDS[1]] * m + [LOG_BW_BOUNDS[1]] * m)
+    results = de_multi_seed(cost, (lo, hi), seeds, maxiter=maxiter)
+    best = min(results, key=lambda r: float(r.fun))
+    x = np.asarray(best.x, float)
+    links = {k: LinkParams(alpha_s=float(10.0 ** x[j]),
+                           bw_bytes_per_s=float(10.0 ** x[m + j]))
+             for j, k in enumerate(kinds)}
+    return links, float(best.fun)
+
+
+def _mae_from_matrices(H: np.ndarray, V: np.ndarray, y: np.ndarray,
+                       links: Links) -> float:
+    """MAE of ``links`` priced directly on the coefficient matrices —
+    ``Σ_op H·α_op + V/bw_op`` per row, no schedule rebuilding."""
+    if not len(y):
+        return 0.0
+    from repro.perf.costmodel.primitives import link_for
+    alphas = np.array([link_for(op, links).alpha_s for op in COLLECTIVES])
+    inv_bw = np.array([1.0 / link_for(op, links).bw_bytes_per_s
+                       for op in COLLECTIVES])
+    pred = H @ alphas + V @ inv_bw
+    return float(np.mean(np.abs(pred - y)))
+
+
+def dataset_mae_s(rows: Sequence[Mapping], links: Links) -> float:
+    """Mean |predicted − residual| seconds of ``links`` over ``rows``."""
+    return _mae_from_matrices(*residual_matrices(rows), links)
+
+
+def fit_calibration(rows: Sequence[Mapping], *,
+                    per_collective: bool = False,
+                    seeds: Sequence[int] = (0, 1, 2),
+                    maxiter: int = 200,
+                    label: Optional[str] = None,
+                    source: str = "") -> Calibration:
+    """Fit LinkParams against the measured−compute residuals of ``rows``.
+
+    Always fits one shared link; with ``per_collective=True`` each
+    collective kind present in the data additionally gets its own link
+    (absent kinds fall back to the shared fit). Raises if no row
+    constrains the link (no sharded measurements above one device).
+    """
+    ok = calibration_rows(rows)
+    if not ok:
+        raise ValueError("no calibration rows: need t_measured_sharded "
+                         "with n_devices > 1 (run the measured sweep)")
+    H, V, y = residual_matrices(ok)
+    link, shared_mae = _fit_shared(H, V, y, seeds=seeds, maxiter=maxiter)
+    pc: Optional[Dict[str, LinkParams]] = None
+    mae = shared_mae
+    if per_collective:
+        present = [k for j, k in enumerate(COLLECTIVES)
+                   if (H[:, j] > 0).any() or (V[:, j] > 0).any()]
+        pc, mae = _fit_links(H, V, y, present, seeds=seeds,
+                             maxiter=maxiter)
+    mae_default = _mae_from_matrices(H, V, y, DEFAULT_LINK)
+    meta = {"n_rows": len(ok), "source": source,
+            "mode": "per_collective" if per_collective else "global",
+            "mae_ms_default": mae_default * 1e3,
+            "mae_ms_shared": shared_mae * 1e3,
+            "mae_ms_fitted": mae * 1e3,
+            "seeds": list(seeds), "maxiter": int(maxiter)}
+    return Calibration(
+        label=label or ("fitted:per-collective" if per_collective
+                        else "fitted:global"),
+        default=link, per_collective=pc, meta=meta)
+
+
+def _fit_shared(H, V, y, *, seeds, maxiter) -> Tuple[LinkParams, float]:
+    """One link for every collective kind: collapse the coefficient
+    matrix to a single column and reuse the generic fitter."""
+    Hs = H.sum(axis=1, keepdims=True)
+    Vs = V.sum(axis=1, keepdims=True)
+    links, mae = _fit_links(Hs, Vs, y, [COLLECTIVES[0]],
+                            seeds=seeds, maxiter=maxiter)
+    return links[COLLECTIVES[0]], mae
+
+
+# ---------------------------------------------------------------------------
+# Re-simulation (calibrated-vs-default comparison)
+# ---------------------------------------------------------------------------
+
+def resimulate_rows(rows: Sequence[Mapping],
+                    calibration: Calibration) -> List[Dict]:
+    """Sweep rows with the simulated columns re-priced under a calibration.
+
+    ``comm_ms`` / ``t_simulated`` / ``time_ms`` are recomputed from the
+    row's own schedule inputs; measured columns and features are
+    untouched, so the result feeds the same fit/report pipeline as the
+    original rows (``calibration`` column records the link's label).
+    """
+    out: List[Dict] = []
+    links = calibration.links()
+    for r in rows:
+        if "error" in r:
+            out.append(dict(r))
+            continue
+        comm_ms = strategy_comm_seconds(r["features"]["strategy"],
+                                        row_inputs(r), links) * 1e3
+        t_sim = float(r["measured_ms"]) + comm_ms
+        out.append({**r, "comm_ms": comm_ms, "t_simulated": t_sim,
+                    "time_ms": t_sim, "calibration": calibration.label})
+    return out
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        description="Fit α-β link parameters from measured sweep residuals")
+    ap.add_argument("--rows", default=os.path.join(
+        os.path.dirname(default_calibration_path()),
+        "lenet_sweep_measured.json"),
+        help="sweep rows JSON (from benchmarks.measured_sweep)")
+    ap.add_argument("--out", default=default_calibration_path(),
+                    help="calibration JSON artifact to write")
+    ap.add_argument("--per-collective", action="store_true",
+                    help="fit one link per collective kind")
+    ap.add_argument("--seeds", type=int, default=3)
+    ap.add_argument("--maxiter", type=int, default=200)
+    ap.add_argument("--dry-run", action="store_true",
+                    help="print the plan and exit without fitting")
+    return ap
+
+
+def main(argv=None):
+    args = build_parser().parse_args(argv)
+    plan = {"rows": args.rows, "out": args.out,
+            "per_collective": bool(args.per_collective),
+            "seeds": args.seeds, "maxiter": args.maxiter}
+    print(json.dumps({"calibrate_plan": plan}), flush=True)
+    if args.dry_run:
+        return plan
+
+    with open(args.rows) as f:
+        rows = json.load(f)
+    cal = fit_calibration(rows, per_collective=args.per_collective,
+                          seeds=tuple(range(args.seeds)),
+                          maxiter=args.maxiter,
+                          source=os.path.relpath(args.rows))
+    cal.save(args.out)
+    print(json.dumps({"calibration": cal.to_dict()}, indent=1))
+    print(f"wrote {args.out}", flush=True)
+    return cal
+
+
+if __name__ == "__main__":
+    main()

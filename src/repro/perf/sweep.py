@@ -10,12 +10,14 @@ every trial records *two* distributed iteration times side-by-side
 
   * ``t_simulated`` — the container adaptation of the original design:
     single-device compute time *measured* on the per-device sub-batch
-    (batch/n_devices) plus the data-parallel communication term from the
-    deterministic α-β ring model below;
+    plus the per-strategy communication schedule priced by the collective
+    cost model (``repro.perf.costmodel``: α-β ring primitives under the
+    calibrated — or default — ``LinkParams``; the row's ``calibration``
+    column names the link that priced it);
   * ``t_measured_sharded`` — the wall-clock median of a *real*
     ``shard_map`` iteration over ``n_devices`` of the host device pool:
-    the global batch is sharded over a ``("data",)`` mesh, fsdp-style
-    parameter shards are all-gathered in-body, and the gradient
+    the global batch is sharded over the data axis of the strategy's
+    mesh, parameter shards are all-gathered in-body, and the gradient
     all-reduce-mean runs through the wire-compressed collective
     (``repro.dist.compression.compressed_psum_mean``). The collectives
     are real XLA collectives; on a CPU pool the devices timeshare cores,
@@ -29,7 +31,7 @@ from __future__ import annotations
 import json
 import time
 from dataclasses import asdict, dataclass
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -45,41 +47,41 @@ from repro.configs.lenet5 import (ACTIVATIONS, BATCH_SIZES, DATASETS,
 from repro.data.synthetic import lenet_batch
 from repro.dist.compression import WIRE_BITS, compressed_psum_mean
 from repro.dist.sharding import gather_to_full, shard_of_full
-from repro.models.lenet import init_lenet, lenet_loss
+from repro.models.lenet import feature_dims, init_lenet, lenet_loss
+from repro.perf.costmodel import (Calibration, ScheduleInputs,
+                                  load_calibration, mesh_axes_for,
+                                  strategy_comm_seconds)
 from repro.perf.features import lenet_features
 
 MODES = ("jit", "jit_donate", "eager")
 
-# α-β ring collective model (documented simulation; see DESIGN.md §5).
-RING_ALPHA_S = 20e-6            # per-hop latency
-RING_BW = 12.5e9                # bytes/s inter-device link
+# Sentinels recorded in ``SweepRow.sharded_skip`` when the measured
+# column is None — documented in docs/METHODOLOGY.md (row schema).
+SKIP_EAGER = "eager-mode"            # op-by-op dispatch measures python, not comm
+SKIP_POOL = "pool-too-small"         # host pool < n_devices
+SKIP_NOT_REQUESTED = "not-requested"  # sharded=False sweep
 
 
-def comm_seconds(n_devices: int, param_bytes: int, strategy: str = "dp",
-                 wire_bits: int = 32) -> float:
-    """Per-iteration communication time of one sampled scenario.
+def lenet_act_bytes(cfg: LeNet5Config) -> int:
+    """fp32 bytes of the activations at the dense-block boundaries for
+    the *global* batch — the tensors a Megatron-style tp split
+    all-reduces (flattened conv features entering fc1, plus the fc1/fc2
+    outputs). Only tp-family schedules consume this."""
+    _, _, flat = feature_dims(cfg)
+    return 4 * cfg.batch_size * (flat + 120 + 84)
 
-    dp    — ring all-reduce of the (compressed) gradients:
-            2·(n-1)/n · bytes·bits/32 volume, 2·(n-1) latency hops.
-    fsdp  — reduce-scatter of compressed gradients + two all-gathers of
-            the (uncompressed, fp32-wire) parameter shards, one each for
-            forward and backward (canonical ZeRO-3 schedule):
-            (n-1)/n · bytes·(bits/32 + 2), 3·(n-1) hops.
-    """
-    if n_devices <= 1:
-        return 0.0
-    n = n_devices
-    grad_frac = wire_bits / 32.0
-    if strategy == "fsdp":
-        vol = (n - 1) / n * param_bytes * (grad_frac + 2.0)
-        hops = 3 * (n - 1)
-    elif strategy == "dp":                  # ring all-reduce
-        vol = 2 * (n - 1) / n * param_bytes * grad_frac
-        hops = 2 * (n - 1)
-    else:
-        raise ValueError(f"no comm model for strategy {strategy!r}; "
-                         f"have {DIST_STRATEGIES}")
-    return vol / RING_BW + hops * RING_ALPHA_S
+
+def comm_seconds(cfg: LeNet5Config, param_bytes: int,
+                 calibration: Optional[Calibration] = None) -> float:
+    """Per-iteration communication time of one sampled scenario, priced
+    by the collective cost model under ``calibration`` (None = the
+    shared calibration resolved by ``load_calibration``: the checked-in
+    fitted artifact when present, the documented defaults otherwise)."""
+    cal = calibration if calibration is not None else load_calibration()
+    inp = ScheduleInputs(n_devices=cfg.n_devices, param_bytes=param_bytes,
+                         wire_bits=WIRE_BITS[cfg.compression],
+                         act_bytes=lenet_act_bytes(cfg))
+    return strategy_comm_seconds(cfg.strategy, inp, cal.links())
 
 
 def sample_config(rng: np.random.Generator) -> LeNet5Config:
@@ -139,47 +141,77 @@ class SweepRow:
     features: Dict
     mode: str
     measured_ms: float          # median single-device iteration time
-    comm_ms: float              # α-β simulated all-reduce time
+    comm_ms: float              # cost-model simulated collective time
     time_ms: float              # measured/n-scaled + comm  (fit target)
     param_bytes: int
-    # measured-vs-simulated pair (docs/METHODOLOGY.md): the α-β total and
-    # the wall-clock of the real shard_map step over n_devices (None when
-    # the host pool has fewer devices than the trial asks for).
+    # measured-vs-simulated pair (docs/METHODOLOGY.md): the schedule-
+    # priced total and the wall-clock of the real shard_map step over
+    # n_devices. When the measured column is None, ``sharded_skip``
+    # carries the explicit reason sentinel ("eager-mode",
+    # "pool-too-small", "not-requested") so downstream consumers never
+    # misread an implicit default as a measurement of 0.0.
     t_simulated: float = 0.0
     t_measured_sharded: Optional[float] = None
+    sharded_skip: Optional[str] = None
+    # provenance of the simulated columns: which link priced the
+    # schedule ("default" or the fitted calibration's label) and the
+    # activation footprint the tp-family schedules were billed for.
+    calibration: str = "default"
+    act_bytes: int = 0
 
 
-def _fsdp_pspec(shape, n: int) -> P:
-    """ZeRO-style spec for an unannotated LeNet param: shard the first
-    dim divisible by the data-axis size; leave the rest replicated."""
-    for i, d in enumerate(shape):
-        if d % n == 0 and d >= n:
-            return P(*([None] * i + ["data"]))
-    return P()
+def _strategy_pspecs(params, strategy: str, axes_sizes: Dict[str, int]):
+    """Explicit per-strategy PartitionSpecs for the (unannotated) LeNet
+    params: each mesh axis in the strategy's shard order is assigned to
+    the first still-unassigned dimension it divides.
+
+    dp replicates; fsdp shards over "data"; tp over "model"; fsdp_tp
+    assigns "data" then "model" to (different) divisible dims — the
+    LeNet-scale counterpart of the logical-rule registry the LM path
+    uses (docs/METHODOLOGY.md)."""
+    from repro.models.layers import is_param
+
+    order = {"dp": (), "fsdp": ("data",), "tp": ("model",),
+             "fsdp_tp": ("data", "model")}[strategy]
+
+    def one(p):
+        shape = p.value.shape
+        entries: List[Optional[str]] = [None] * len(shape)
+        queue = [a for a in order if axes_sizes.get(a, 1) > 1]
+        for i, d in enumerate(shape):
+            if not queue:
+                break
+            a = queue[0]
+            if d % axes_sizes[a] == 0 and d >= axes_sizes[a]:
+                entries[i] = a
+                queue.pop(0)
+        while entries and entries[-1] is None:
+            entries.pop()
+        return P(*entries)
+
+    return jax.tree.map(one, params, is_leaf=is_param)
 
 
 def make_sharded_iteration(cfg: LeNet5Config, mode: str, mesh: Mesh,
                            params):
     """One *real* distributed training iteration under ``shard_map``.
 
-    dp: params replicated, batch sharded over "data", gradients
-    all-reduce-meaned through the compressed collective. fsdp: params
-    additionally enter sharded (first divisible dim) and are
-    all-gathered in-body — the gather is the parameter traffic the α-β
-    fsdp model charges for; the optimizer then updates local shards.
+    Works for all four registry strategies on the strategy's own mesh
+    (``mesh_axes_for``): the batch is sharded over the "data" axis when
+    the mesh has one (replicated over "model"), params enter sharded per
+    ``_strategy_pspecs`` and are all-gathered in-body — the parameter
+    traffic the fsdp/tp schedules charge for — and gradients all-reduce-
+    mean through the compressed collective over *all* mesh axes (the
+    model-axis contributions are identical, so the mean is exact); the
+    optimizer then updates local shards.
     """
     from jax.experimental.shard_map import shard_map
     from repro.models.layers import Param, is_param
 
-    n = mesh.shape["data"]
-    if cfg.strategy == "fsdp":
-        pspecs = jax.tree.map(lambda p: _fsdp_pspec(p.value.shape, n),
-                              params, is_leaf=is_param)
-    elif cfg.strategy == "dp":
-        pspecs = jax.tree.map(lambda p: P(), params, is_leaf=is_param)
-    else:
-        raise ValueError(f"no sharded iteration for {cfg.strategy!r}; "
-                         f"have {DIST_STRATEGIES}")
+    axes_sizes = dict(mesh.shape)
+    axis_names = tuple(mesh.axis_names)
+    pspecs = _strategy_pspecs(params, cfg.strategy, axes_sizes)
+    batch_spec = P("data") if "data" in axes_sizes else P()
 
     def body(params, batch, rng):
         full = jax.tree.map(
@@ -188,7 +220,7 @@ def make_sharded_iteration(cfg: LeNet5Config, mode: str, mesh: Mesh,
         loss, grads = jax.value_and_grad(
             lambda p, b, r: lenet_loss(p, b, cfg, r))(full, batch, rng)
         grads = jax.tree.map(
-            lambda g: compressed_psum_mean(g, "data", cfg.compression),
+            lambda g: compressed_psum_mean(g, axis_names, cfg.compression),
             grads)
         grads = jax.tree.map(
             lambda g, s: Param(shard_of_full(g.value, s, mesh), g.axes),
@@ -199,36 +231,38 @@ def make_sharded_iteration(cfg: LeNet5Config, mode: str, mesh: Mesh,
             m0 = jax.tree.map(jnp.zeros_like, params)
             new_params, _, _ = _adam_step(params, grads, m0, m0,
                                           cfg.learning_rate, 1)
-        return new_params, jax.lax.pmean(loss, "data")
+        return new_params, jax.lax.pmean(loss, axis_names)
 
     it = shard_map(body, mesh=mesh,
-                   in_specs=(pspecs, P("data"), P()),
+                   in_specs=(pspecs, batch_spec, P()),
                    out_specs=(pspecs, P()), check_rep=False)
     if mode == "eager":
-        return it, pspecs
+        return it, pspecs, batch_spec
     donate = (0,) if mode == "jit_donate" else ()
-    return jax.jit(it, donate_argnums=donate), pspecs
+    return jax.jit(it, donate_argnums=donate), pspecs, batch_spec
 
 
 def measure_sharded_trial(cfg: LeNet5Config, mode: str, *,
                           n_iters: int = 3, seed: int = 0
-                          ) -> Optional[float]:
-    """Median wall-clock seconds of the global-batch shard_map iteration
-    over ``cfg.n_devices`` devices of the host pool; None if the pool is
-    too small (the caller records the row without the measured column)."""
+                          ) -> Tuple[Optional[float], Optional[str]]:
+    """(median wall-clock seconds of the global-batch shard_map iteration
+    over ``cfg.n_devices`` pool devices, skip sentinel): the measurement
+    when the pool fits the trial, else (None, SKIP_POOL)."""
     devs = jax.devices()
     if len(devs) < cfg.n_devices:
-        return None
+        return None, SKIP_POOL
     key = jax.random.PRNGKey(seed)
-    mesh = Mesh(np.asarray(devs[:cfg.n_devices]), ("data",))
+    axes = mesh_axes_for(cfg.strategy, cfg.n_devices)
+    mesh = Mesh(np.asarray(devs[:cfg.n_devices]).reshape(
+        tuple(axes.values())), tuple(axes))
     from repro.models.layers import is_param
     params = init_lenet(key, cfg)
     batch = lenet_batch(cfg, step=0, seed=seed, batch=cfg.batch_size)
-    it, pspecs = make_sharded_iteration(cfg, mode, mesh, params)
+    it, pspecs, batch_spec = make_sharded_iteration(cfg, mode, mesh, params)
     shardings = jax.tree.map(lambda p, s: NamedSharding(mesh, s), params,
                              pspecs, is_leaf=is_param)
     p = jax.device_put(params, shardings)
-    b = jax.device_put(batch, NamedSharding(mesh, P("data")))
+    b = jax.device_put(batch, NamedSharding(mesh, batch_spec))
 
     p, _ = it(p, b, key)                          # warm-up / compile
     jax.block_until_ready(p)
@@ -238,14 +272,20 @@ def measure_sharded_trial(cfg: LeNet5Config, mode: str, *,
         p, loss = it(p, b, key)
         jax.block_until_ready(loss)
         times.append(time.perf_counter() - t0)
-    return float(np.median(times))
+    return float(np.median(times)), None
 
 
 def measure_trial(cfg: LeNet5Config, mode: str, *, n_iters: int = 3,
-                  seed: int = 0, sharded: bool = False) -> SweepRow:
+                  seed: int = 0, sharded: bool = False,
+                  calibration: Optional[Calibration] = None) -> SweepRow:
+    cal = calibration if calibration is not None else load_calibration()
     key = jax.random.PRNGKey(seed)
     params = init_lenet(key, cfg)    # Param tree; tree ops map through
-    per_dev = max(cfg.batch_size // cfg.n_devices, 1)
+    # Compute runs on the per-device sub-batch: the batch shards over the
+    # strategy's *data* axis only (tp replicates it over model, exactly
+    # like the measured shard_map path).
+    data_shards = mesh_axes_for(cfg.strategy, cfg.n_devices).get("data", 1)
+    per_dev = max(cfg.batch_size // data_shards, 1)
     batch = lenet_batch(cfg, step=0, seed=seed, batch=per_dev)
     it = make_iteration(cfg, mode)
 
@@ -261,32 +301,39 @@ def measure_trial(cfg: LeNet5Config, mode: str, *, n_iters: int = 3,
     measured = float(np.median(times))
 
     pb = sum(int(np.prod(x.shape)) * 4 for x in jax.tree.leaves(params))
-    comm = comm_seconds(cfg.n_devices, pb, strategy=cfg.strategy,
-                        wire_bits=WIRE_BITS[cfg.compression])
+    comm = comm_seconds(cfg, pb, calibration=cal)
     t_sim = measured * 1e3 + comm * 1e3
-    t_meas = None
+    t_meas, skip = None, SKIP_NOT_REQUESTED
     # The sharded column is only meaningful compiled: a shard_map program
     # dispatched op-by-op measures python dispatch x n_devices (~700x the
     # compiled step on this host), not communication — so eager-mode rows
     # keep t_measured_sharded=None and the jit/jit_donate rows cover
     # every (strategy, compression, n_devices) cell.
-    if sharded and mode != "eager":
-        t_meas = measure_sharded_trial(cfg, mode, n_iters=n_iters,
-                                       seed=seed)
-        if t_meas is not None:
-            t_meas *= 1e3
+    if sharded:
+        if mode == "eager":
+            skip = SKIP_EAGER
+        else:
+            t_meas, skip = measure_sharded_trial(cfg, mode,
+                                                 n_iters=n_iters, seed=seed)
+            if t_meas is not None:
+                t_meas *= 1e3
     return SweepRow(features=lenet_features(cfg), mode=mode,
                     measured_ms=measured * 1e3, comm_ms=comm * 1e3,
                     time_ms=t_sim, param_bytes=pb,
-                    t_simulated=t_sim, t_measured_sharded=t_meas)
+                    t_simulated=t_sim, t_measured_sharded=t_meas,
+                    sharded_skip=skip, calibration=cal.label,
+                    act_bytes=lenet_act_bytes(cfg))
 
 
 def run_sweep(n_trials: int = 300, modes: Sequence[str] = MODES,
               seed: int = 0, out_path: Optional[str] = None,
-              verbose_every: int = 50, sharded: bool = False) -> List[Dict]:
+              verbose_every: int = 50, sharded: bool = False,
+              calibration: Optional[Calibration] = None) -> List[Dict]:
     """``sharded=True`` (the benchmarks.measured_sweep entry point) adds
     the real shard_map measurement per trial — roughly doubling trial
-    cost; simulated-only consumers keep the default off."""
+    cost; simulated-only consumers keep the default off. ``calibration``
+    prices every simulated column (None = the shared loaded one)."""
+    cal = calibration if calibration is not None else load_calibration()
     rng = np.random.default_rng(seed)
     rows: List[Dict] = []
     t0 = time.time()
@@ -294,7 +341,8 @@ def run_sweep(n_trials: int = 300, modes: Sequence[str] = MODES,
         cfg = sample_config(rng)
         mode = modes[i % len(modes)]
         try:
-            row = measure_trial(cfg, mode, seed=seed + i, sharded=sharded)
+            row = measure_trial(cfg, mode, seed=seed + i, sharded=sharded,
+                                calibration=cal)
         except Exception as e:      # a pathological config; record & skip
             rows.append({"error": str(e), "mode": mode,
                          "features": lenet_features(cfg)})
@@ -326,8 +374,8 @@ def fit_target_ms(row: Dict, source: str = "simulated") -> float:
     extrinsic signal on this hardware and degenerate the fit.
 
     ``source`` picks the iteration time: "simulated" (per-device measured
-    compute + α-β comm, the container default) or "measured" (the real
-    shard_map step — raises if the row has no measured column).
+    compute + schedule-priced comm, the container default) or "measured"
+    (the real shard_map step — raises if the row has no measured column).
     """
     b = row["features"]["batch_size"]
     if source == "measured":

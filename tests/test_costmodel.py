@@ -1,0 +1,224 @@
+"""The calibrated collective cost model (repro.perf.costmodel).
+
+Three layers under test: α-β ring primitives, per-strategy schedules
+(coverage over the *whole* strategy registry — the regression for the
+old two-strategy `comm_seconds` that raised ValueError for tp/fsdp_tp),
+and the DE calibration round-trip: residuals synthesized from known
+LinkParams must fit back to those parameters.
+"""
+import json
+import math
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.lenet5 import DIST_STRATEGIES, N_DEVICES
+from repro.dist.sharding import STRATEGIES, STRATEGY_COLLECTIVES
+from repro.perf.costmodel import (COLLECTIVES, DEFAULT_CALIBRATION,
+                                  DEFAULT_LINK, Calibration, LinkParams,
+                                  ScheduleInputs, build_schedule,
+                                  collective_seconds, fit_calibration,
+                                  load_calibration, mesh_axes_for,
+                                  resimulate_rows, strategy_comm_seconds)
+from repro.perf.costmodel.calibrate import calibration_rows, dataset_mae_s
+
+INP = ScheduleInputs(n_devices=4, param_bytes=1_000_000, wire_bits=8,
+                     act_bytes=400_000)
+
+
+# ---------------------------------------------------------------------------
+# Primitives
+# ---------------------------------------------------------------------------
+
+def test_ring_algebra():
+    lk = LinkParams(alpha_s=1e-5, bw_bytes_per_s=1e9)
+    n, B = 4, 1e6
+    assert collective_seconds("all_reduce", n, B, lk) == pytest.approx(
+        2 * (n - 1) * 1e-5 + 2 * (n - 1) / n * B / 1e9)
+    assert collective_seconds("all_gather", n, B, lk) == pytest.approx(
+        (n - 1) * 1e-5 + (n - 1) / n * B / 1e9)
+    # degenerate ring: no devices to talk to, no cost
+    for op in COLLECTIVES:
+        assert collective_seconds(op, 1, B, lk) == 0.0
+
+
+def test_unknown_collective_rejected():
+    with pytest.raises(ValueError, match="unknown collective"):
+        collective_seconds("broadcast", 4, 1e6)
+
+
+# ---------------------------------------------------------------------------
+# Schedules: full registry coverage (the comm_seconds ValueError regression)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy", sorted(STRATEGIES))
+@pytest.mark.parametrize("n", sorted(set(N_DEVICES) | {8}))
+def test_every_registry_strategy_prices_finite(strategy, n):
+    t = strategy_comm_seconds(
+        strategy, ScheduleInputs(n_devices=n, param_bytes=500_000,
+                                 wire_bits=8, act_bytes=100_000))
+    assert math.isfinite(t) and t >= 0.0
+    if n == 1:
+        assert t == 0.0
+    elif strategy != "fsdp_tp" or n > 1:
+        assert t > 0.0
+
+
+def test_dist_strategies_covered_by_registry():
+    """Every strategy the sweep samples resolves to a schedule."""
+    assert set(DIST_STRATEGIES) <= set(STRATEGY_COLLECTIVES)
+
+
+def test_wire_bits_scales_gradient_volume_only():
+    full = build_schedule("fsdp", ScheduleInputs(4, 1_000_000, 32))
+    half = build_schedule("fsdp", ScheduleInputs(4, 1_000_000, 16))
+    g32 = [c.nbytes for c in full if c.tensor == "grad"]
+    g16 = [c.nbytes for c in half if c.tensor == "grad"]
+    assert g16 == [b / 2 for b in g32]
+    assert ([c.nbytes for c in full if c.tensor == "param"]
+            == [c.nbytes for c in half if c.tensor == "param"])
+
+
+def test_fsdp_tp_decomposes_per_axis():
+    """The 2-D mesh must split into data-axis ZeRO traffic at 1/|model|
+    volume plus model-axis activation all-reduces at 1/|data| volume."""
+    sched = build_schedule("fsdp_tp", INP)
+    axes = mesh_axes_for("fsdp_tp", INP.n_devices)
+    assert axes == {"data": 2, "model": 2}
+    data_calls = [c for c in sched if c.axis == "data"]
+    model_calls = [c for c in sched if c.axis == "model"]
+    assert {c.op for c in data_calls} == {"all_gather", "reduce_scatter"}
+    assert {c.op for c in model_calls} == {"all_reduce"}
+    ag = [c for c in data_calls if c.op == "all_gather"]
+    assert len(ag) == 2 and all(
+        c.nbytes == INP.param_bytes / axes["model"] for c in ag)
+    assert all(c.nbytes == INP.act_bytes / axes["data"]
+               for c in model_calls)
+    # tp on the same device count spends *more* on activations (no data
+    # axis to thin them) and nothing on parameter gathers
+    tp = build_schedule("tp", INP)
+    assert all(c.axis == "model" and c.tensor == "act" for c in tp)
+
+
+def test_unknown_strategy_rejected():
+    with pytest.raises(ValueError, match="unknown strategy"):
+        strategy_comm_seconds("pipeline", INP)
+
+
+# ---------------------------------------------------------------------------
+# Calibration round-trip
+# ---------------------------------------------------------------------------
+
+def _synthetic_rows(link: LinkParams, compute_ms: float = 5.0):
+    """Sweep-row dicts whose measured−compute residual is *exactly* the
+    schedule cost under ``link`` — a fit must recover it."""
+    rows = []
+    for strategy in DIST_STRATEGIES:
+        for n in (2, 4, 8):
+            for pb in (250_000, 1_000_000, 4_000_000):
+                inp = ScheduleInputs(n_devices=n, param_bytes=pb,
+                                     wire_bits=8, act_bytes=pb // 4)
+                comm_ms = strategy_comm_seconds(strategy, inp, link) * 1e3
+                rows.append({
+                    "features": {"strategy": strategy, "n_devices": n,
+                                 "batch_size": 32, "wire_bits": 8},
+                    "mode": "jit", "param_bytes": pb,
+                    "act_bytes": pb // 4,
+                    "measured_ms": compute_ms,
+                    "comm_ms": comm_ms,
+                    "time_ms": compute_ms + comm_ms,
+                    "t_simulated": compute_ms + comm_ms,
+                    "t_measured_sharded": compute_ms + comm_ms,
+                    "sharded_skip": None, "calibration": "synthetic"})
+    return rows
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.floats(-4.5, -3.0), st.floats(7.5, 9.5))
+def test_calibration_roundtrip_recovers_link(log_alpha, log_bw):
+    """Property: exact synthetic residuals -> fitted α/bw within 25% in
+    log-space of the generating link (DE with a small budget)."""
+    true = LinkParams(alpha_s=10.0 ** log_alpha,
+                      bw_bytes_per_s=10.0 ** log_bw)
+    rows = _synthetic_rows(true)
+    cal = fit_calibration(rows, seeds=(0,), maxiter=150)
+    got = cal.default
+    assert abs(math.log10(got.alpha_s) - log_alpha) < 0.25 * abs(log_alpha)
+    assert abs(math.log10(got.bw_bytes_per_s) - log_bw) < 0.25 * log_bw
+    # and the fitted link must out-predict the default constants
+    ok = calibration_rows(rows)
+    assert dataset_mae_s(ok, cal.links()) <= dataset_mae_s(
+        ok, DEFAULT_LINK) + 1e-12
+
+
+def test_per_collective_fit_and_resimulate(tmp_path):
+    true = LinkParams(alpha_s=2e-4, bw_bytes_per_s=5e8)
+    rows = _synthetic_rows(true)
+    cal = fit_calibration(rows, per_collective=True, seeds=(0,),
+                          maxiter=120, label="test-cal")
+    assert cal.label == "test-cal"
+    assert cal.per_collective
+    # only kinds the schedules actually issue get their own link
+    assert set(cal.per_collective) <= set(COLLECTIVES)
+    assert "all_to_all" not in cal.per_collective
+    assert cal.meta["mae_ms_fitted"] <= cal.meta["mae_ms_default"]
+
+    resim = resimulate_rows(rows, cal)
+    assert all(r["calibration"] == "test-cal" for r in resim)
+    orig = rows[3]
+    new = resim[3]
+    assert new["t_simulated"] == pytest.approx(
+        orig["measured_ms"] + new["comm_ms"])
+    # resimulating under the *generating* link reproduces the rows
+    ident = resimulate_rows(rows, Calibration(label="true", default=true))
+    for a, b in zip(rows, ident):
+        assert b["comm_ms"] == pytest.approx(a["comm_ms"], rel=1e-6)
+
+
+def test_calibration_json_roundtrip(tmp_path):
+    cal = Calibration(label="rt", default=LinkParams(1e-4, 1e9),
+                      per_collective={"all_reduce": LinkParams(2e-4, 2e9)},
+                      meta={"n_rows": 7})
+    p = os.path.join(tmp_path, "cal.json")
+    cal.save(p)
+    with open(p) as f:
+        blob = json.load(f)
+    assert blob["version"] == 1
+    back = Calibration.load(p)
+    assert back.default == cal.default
+    assert dict(back.per_collective) == dict(cal.per_collective)
+    assert back.meta["n_rows"] == 7
+    # env-var override: empty value forces the documented defaults
+    os.environ["REPRO_CALIBRATION"] = ""
+    try:
+        assert load_calibration().default == DEFAULT_LINK
+    finally:
+        del os.environ["REPRO_CALIBRATION"]
+    assert load_calibration(p).label == "rt"
+
+
+def test_fit_requires_constraining_rows():
+    rows = [{"features": {"strategy": "dp", "n_devices": 1,
+                          "batch_size": 8, "wire_bits": 32},
+             "mode": "jit", "param_bytes": 1000, "measured_ms": 1.0,
+             "comm_ms": 0.0, "time_ms": 1.0, "t_simulated": 1.0,
+             "t_measured_sharded": 1.0}]
+    with pytest.raises(ValueError, match="no calibration rows"):
+        fit_calibration(rows)
+
+
+def test_calibration_comparison_report():
+    from repro.core.interpret import calibration_comparison, calibration_report
+    true = LinkParams(alpha_s=1e-4, bw_bytes_per_s=1e9)
+    rows = _synthetic_rows(true)
+    cal = Calibration(label="true-link", default=true)
+    cmp = calibration_comparison(rows, cal)
+    assert "overall" in cmp
+    # pricing with the generating link is exact; the default link is not
+    assert cmp["overall"]["calibrated"]["mape"] == pytest.approx(0.0,
+                                                                 abs=1e-6)
+    assert cmp["overall"]["default"]["mape"] > 0.0
+    txt = calibration_report(rows, cal)
+    assert "true-link" in txt and "overall" in txt

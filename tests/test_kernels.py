@@ -7,6 +7,8 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.quantize import (dequantize_int8_pallas,
+                                    quantize_int8_pallas)
 from repro.kernels.ref import attention_ref, ssd_ref
 from repro.kernels.ssd_scan import ssd_scan
 from repro.models.attention import AttnSpec, attend_blockwise
@@ -121,6 +123,99 @@ def test_ssd_scan_matches_ref(case, dtype):
                                np.asarray(yr, np.float32), atol=tol)
     np.testing.assert_allclose(np.asarray(st_final, np.float32),
                                np.asarray(str_, np.float32), atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# int8 wire codec: Pallas kernels vs the jnp reference in repro.dist
+# ---------------------------------------------------------------------------
+
+QUANT_SHAPES = [
+    (5, 5, 3, 16),      # conv kernel (ragged vs the 128-lane tiling)
+    (400, 120),         # fc weight
+    (84,),              # bias-sized vector
+    (257, 129),         # deliberately off-tile in both dims
+    (8192,),            # multiple full blocks
+]
+
+
+def _ref_quant(x):
+    """The jnp codec from repro.dist.compression (inlined so the test
+    pins the *contract*, not the dispatcher)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf)) / 127.0
+    q = jnp.clip(jnp.round(xf / jnp.where(scale > 0, scale, 1.0)),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+@pytest.mark.parametrize("shape", QUANT_SHAPES)
+def test_quantize_int8_pallas_matches_ref(shape):
+    x = jax.random.normal(jax.random.fold_in(KEY, len(shape) + shape[0]),
+                          shape) * 3.0
+    q, s = quantize_int8_pallas(x, interpret=True)
+    qr, sr = _ref_quant(x)
+    assert q.shape == x.shape and q.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    np.testing.assert_allclose(float(s), float(sr), rtol=1e-7)
+    d = dequantize_int8_pallas(q, s, interpret=True)
+    np.testing.assert_allclose(np.asarray(d),
+                               np.asarray(qr.astype(jnp.float32) * sr),
+                               rtol=1e-7)
+    # one-ulp round-trip bound, same invariant the jnp codec guarantees
+    assert float(jnp.max(jnp.abs(d - x))) <= float(s) / 2 + 1e-8
+
+
+def test_quantize_int8_pallas_half_ulp_boundaries():
+    """Adversarial bit-identity: every element sits at a (k+0.5)·scale
+    rounding boundary, where a reciprocal-multiply (or a jit-context
+    constant-division rewrite) would flip round-half-to-even the other
+    way. Pallas and ref must still agree bit-for-bit."""
+    for i in range(20):
+        key = jax.random.fold_in(KEY, 1000 + i)
+        mx = float(jax.random.uniform(key, (), minval=0.5, maxval=5.0))
+        scale = mx / 127.0
+        k = jax.random.randint(jax.random.fold_in(key, 1), (512,),
+                               -126, 126)
+        x = ((k.astype(jnp.float32) + 0.5) * scale).at[0].set(mx)
+        q, s = quantize_int8_pallas(x, interpret=True)
+        qr, sr = _ref_quant(x)
+        np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+        assert float(s) == float(sr)
+
+
+def test_quantize_int8_pallas_zero_tensor():
+    q, s = quantize_int8_pallas(jnp.zeros((33,)), interpret=True)
+    assert float(s) == 0.0
+    assert not np.asarray(q).any()
+    d = dequantize_int8_pallas(q, s, interpret=True)
+    assert not np.asarray(d).any()
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 600), st.floats(1e-3, 1e3))
+def test_quantize_int8_pallas_property(n, mag):
+    """Property: pallas == ref bit-for-bit over random sizes/magnitudes
+    (incl. sizes that exercise the zero-padding path)."""
+    x = jax.random.normal(jax.random.fold_in(KEY, n), (n,)) * mag
+    q, s = quantize_int8_pallas(x, interpret=True)
+    qr, sr = _ref_quant(x)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    np.testing.assert_allclose(float(s), float(sr), rtol=1e-7)
+
+
+def test_compression_dispatcher_consistency():
+    """The repro.dist codec (jnp path on CPU) and the pallas kernels must
+    implement the same function — the dispatch in quantize_int8 swaps
+    implementations, never numerics."""
+    from repro.dist.compression import dequantize_int8, quantize_int8
+    x = jax.random.normal(jax.random.fold_in(KEY, 99), (3, 3, 16, 32))
+    q1, s1 = quantize_int8(x)
+    q2, s2 = quantize_int8_pallas(x, interpret=True)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+    np.testing.assert_allclose(float(s1), float(s2), rtol=1e-7)
+    np.testing.assert_allclose(np.asarray(dequantize_int8(q1, s1)),
+                               np.asarray(dequantize_int8_pallas(
+                                   q2, s2, interpret=True)), rtol=1e-7)
 
 
 def test_ssd_chunk_invariance():

@@ -1,9 +1,12 @@
 """Sweep-row schema: every trial must carry the measured/simulated pair.
 
 The measured-vs-simulated methodology (docs/METHODOLOGY.md) hinges on
-both columns being populated side-by-side for every strategy; rows from
-a pool smaller than the trial degrade to ``t_measured_sharded: None``
-and must be rejected by the measured fit target, not silently fitted.
+both columns being populated side-by-side for every strategy; rows
+without a real measurement must say *why* via the explicit
+``sharded_skip`` sentinel ("eager-mode" / "pool-too-small" /
+"not-requested") — an implicit default is too easy to misread as 0.0
+downstream — and every simulated column must name the calibration that
+priced it.
 """
 import json
 import os
@@ -16,19 +19,22 @@ import pytest
 
 from repro.configs.lenet5 import (DIST_STRATEGIES, GRAD_COMPRESSIONS,
                                   LeNet5Config)
-from repro.perf.sweep import fit_target_ms, measure_trial
+from repro.perf.sweep import (SKIP_EAGER, SKIP_NOT_REQUESTED, SKIP_POOL,
+                              fit_target_ms, measure_trial)
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 REQUIRED = {"features", "mode", "measured_ms", "comm_ms", "time_ms",
-            "param_bytes", "t_simulated", "t_measured_sharded"}
+            "param_bytes", "t_simulated", "t_measured_sharded",
+            "sharded_skip", "calibration", "act_bytes"}
 
 
 @pytest.mark.parametrize("strategy", DIST_STRATEGIES)
 def test_row_schema_measured_and_simulated_populated(strategy):
     """On a 1-device pool an n_devices=1 trial still runs the real
     shard_map iteration (singleton collectives), so both columns are
-    populated for every strategy."""
+    populated for every registry strategy — including the tp family,
+    which the old two-constant model refused with ValueError."""
     cfg = LeNet5Config(n_devices=1, batch_size=8, strategy=strategy,
                        compression="int8", optimizer="sgd")
     row = asdict(measure_trial(cfg, "jit", n_iters=1, seed=0, sharded=True))
@@ -36,13 +42,16 @@ def test_row_schema_measured_and_simulated_populated(strategy):
     assert row["t_simulated"] > 0
     assert row["t_measured_sharded"] is not None
     assert row["t_measured_sharded"] > 0
+    assert row["sharded_skip"] is None
     assert row["time_ms"] == pytest.approx(row["t_simulated"])
+    assert isinstance(row["calibration"], str) and row["calibration"]
+    assert row["act_bytes"] > 0
     # both fit targets resolve on a fully-populated row
     assert fit_target_ms(row, "simulated") > 0
     assert fit_target_ms(row, "measured") > 0
 
 
-def test_pool_too_small_degrades_to_none():
+def test_pool_too_small_degrades_to_none_with_sentinel():
     if len(jax.devices()) >= 4:
         pytest.skip("session unexpectedly has a multi-device pool")
     cfg = LeNet5Config(n_devices=4, batch_size=8, strategy="dp",
@@ -50,8 +59,25 @@ def test_pool_too_small_degrades_to_none():
     row = asdict(measure_trial(cfg, "jit", n_iters=1, seed=0, sharded=True))
     assert row["t_simulated"] > 0
     assert row["t_measured_sharded"] is None
+    assert row["sharded_skip"] == SKIP_POOL
     with pytest.raises(ValueError, match="t_measured_sharded"):
         fit_target_ms(row, "measured")
+
+
+def test_eager_rows_carry_explicit_skip_sentinel():
+    """Eager shard_map would measure python dispatch ×n, not comm — the
+    row must say so explicitly instead of silently keeping the default."""
+    cfg = LeNet5Config(n_devices=1, batch_size=8, strategy="dp",
+                       compression="none", optimizer="sgd")
+    row = asdict(measure_trial(cfg, "eager", n_iters=1, seed=0,
+                               sharded=True))
+    assert row["t_measured_sharded"] is None
+    assert row["sharded_skip"] == SKIP_EAGER
+    # a simulated-only sweep records a different reason
+    row2 = asdict(measure_trial(cfg, "jit", n_iters=1, seed=0,
+                                sharded=False))
+    assert row2["t_measured_sharded"] is None
+    assert row2["sharded_skip"] == SKIP_NOT_REQUESTED
 
 
 def test_residual_report_groups_rows():
@@ -76,15 +102,16 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import json
 from dataclasses import asdict
-from repro.configs.lenet5 import LeNet5Config
+from repro.configs.lenet5 import DIST_STRATEGIES, LeNet5Config
 from repro.perf.sweep import measure_trial
 out = {}
-for strategy in ("dp", "fsdp"):
+for strategy in DIST_STRATEGIES:
     cfg = LeNet5Config(n_devices=4, batch_size=16, strategy=strategy,
                        compression="int8", optimizer="adam")
     row = asdict(measure_trial(cfg, "jit", n_iters=1, seed=0, sharded=True))
     assert row["t_measured_sharded"] is not None and \
         row["t_measured_sharded"] > 0, (strategy, row)
+    assert row["sharded_skip"] is None, (strategy, row)
     out[strategy] = row["t_measured_sharded"]
 print(json.dumps({"ok": True, "measured_ms": out}))
 """
@@ -97,4 +124,4 @@ def test_multi_device_trial_measures_real_collectives():
                        timeout=900)
     assert r.returncode == 0, (r.stdout[-1500:], r.stderr[-3000:])
     out = json.loads(r.stdout.strip().splitlines()[-1])
-    assert out["ok"] and set(out["measured_ms"]) == {"dp", "fsdp"}
+    assert out["ok"] and set(out["measured_ms"]) == set(DIST_STRATEGIES)

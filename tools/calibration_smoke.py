@@ -1,0 +1,86 @@
+"""CI smoke for the calibration pipeline: tiny sweep → calibrate → schema.
+
+  PYTHONPATH=src python tools/calibration_smoke.py [--out PATH]
+
+Runs a deterministic micro-sweep (every registry strategy × {2, 4}
+devices, one jit trial each, real shard_map measurements on a forced
+4-device pool), fits the link calibration from the residuals, writes the
+JSON artifact, and asserts its schema — so the costmodel subsystem
+cannot silently rot between the rare full-sweep regenerations.
+
+Exit code 0 = artifact written and schema-valid; anything else fails CI.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+# must run before the jax backend initializes
+from repro.launch.train import _force_host_pool  # noqa: E402
+
+_force_host_pool(4)
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+
+REQUIRED_TOP = {"version", "label", "default", "per_collective", "meta"}
+REQUIRED_LINK = {"alpha_s", "bw_bytes_per_s"}
+REQUIRED_META = {"n_rows", "mode", "mae_ms_default", "mae_ms_fitted"}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="/tmp/comm_calibration_smoke.json")
+    ap.add_argument("--maxiter", type=int, default=80)
+    args = ap.parse_args(argv)
+
+    from dataclasses import asdict
+
+    from repro.configs.lenet5 import DIST_STRATEGIES, LeNet5Config
+    from repro.perf.costmodel import (DEFAULT_CALIBRATION, Calibration,
+                                      fit_calibration)
+    from repro.perf.sweep import measure_trial
+
+    t0 = time.time()
+    rows = []
+    for strategy in DIST_STRATEGIES:
+        for n in (2, 4):
+            cfg = LeNet5Config(n_devices=n, batch_size=16,
+                               strategy=strategy, compression="int8",
+                               optimizer="sgd", n_filters=8)
+            row = asdict(measure_trial(cfg, "jit", n_iters=1, seed=n,
+                                       sharded=True,
+                                       calibration=DEFAULT_CALIBRATION))
+            assert row["t_measured_sharded"] is not None, (strategy, n, row)
+            rows.append(row)
+    print(f"micro-sweep: {len(rows)} rows in {time.time()-t0:.0f}s",
+          flush=True)
+
+    cal = fit_calibration(rows, per_collective=True, seeds=(0,),
+                          maxiter=args.maxiter, source="calibration_smoke")
+    cal.save(args.out)
+
+    with open(args.out) as f:
+        blob = json.load(f)
+    assert REQUIRED_TOP <= set(blob), blob.keys()
+    assert REQUIRED_LINK <= set(blob["default"]), blob["default"]
+    assert REQUIRED_META <= set(blob["meta"]), blob["meta"]
+    assert blob["version"] == 1
+    for lk in (blob["per_collective"] or {}).values():
+        assert REQUIRED_LINK <= set(lk), lk
+    # and it must load back through the public loader
+    back = Calibration.load(args.out)
+    assert back.default.alpha_s > 0 and back.default.bw_bytes_per_s > 0
+
+    print(json.dumps({"ok": True, "out": args.out,
+                      "n_rows": blob["meta"]["n_rows"],
+                      "mae_ms_default": blob["meta"]["mae_ms_default"],
+                      "mae_ms_fitted": blob["meta"]["mae_ms_fitted"],
+                      "wall_s": round(time.time() - t0, 1)}))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -18,7 +18,8 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="fewer seeds/generations (CI-scale)")
     ap.add_argument("--only", default="",
-                    help="comma list: table2..table6,fig7,fig8,roofline")
+                    help="comma list: table2..table6,fig7,fig8,roofline,"
+                         "measured,planner")
     args = ap.parse_args()
 
     from benchmarks import tables
@@ -29,19 +30,29 @@ def main() -> None:
     small = 2 if args.quick else 3
     maxiter = 150 if args.quick else 300
 
-    def measured():
-        # subprocess: the measured sweep must force its device pool
+    def _pool_subprocess(cmd, see):
+        # subprocess: these entry points must force their device pool
         # before jax initializes, which this process already did
         import subprocess
         import sys
-        cmd = [sys.executable, "-m", "benchmarks.measured_sweep"]
-        cmd += ["--quick"] if args.quick else ["--trials", "1500"]
-        r = subprocess.run(cmd, cwd=os.path.dirname(os.path.dirname(
-            os.path.abspath(__file__))), capture_output=True, text=True)
+        r = subprocess.run([sys.executable, "-m"] + cmd,
+                           cwd=os.path.dirname(os.path.dirname(
+                               os.path.abspath(__file__))),
+                           capture_output=True, text=True)
         print(r.stdout[-4000:])
         if r.returncode != 0:
             raise RuntimeError(r.stderr[-2000:])
-        return {"see": "benchmarks/MEASURED_SWEEP.md"}
+        return {"see": see}
+
+    def measured():
+        cmd = ["benchmarks.measured_sweep"]
+        cmd += ["--quick"] if args.quick else ["--trials", "1500"]
+        return _pool_subprocess(cmd, "benchmarks/MEASURED_SWEEP.md")
+
+    def planner():
+        cmd = ["benchmarks.plan", "--validate"]
+        cmd += ["--quick"] if args.quick else []
+        return _pool_subprocess(cmd, "benchmarks/PLANNER.md")
 
     jobs = {
         "table2": lambda: tables.table2_fit(seeds, maxiter),
@@ -54,6 +65,7 @@ def main() -> None:
         "fig8": lambda: tables.fig8_coeff_paths("jit", small, maxiter),
         "roofline": roofline_fit,
         "measured": measured,
+        "planner": planner,
     }
     only = [s for s in args.only.split(",") if s]
     results = {}

@@ -22,8 +22,11 @@ PADDING_MODES = ("valid", "same")
 STRIDES = (1, 2, 3)
 DROPOUTS = (0.2, 0.5, 0.8)
 # Paper Table 1: extrinsic parameters.
-N_DEVICES = (1, 2, 4)        # paper used {1,2,3} GPUs; host-device counts must
-                             # divide the simulated device pool, so {1,2,4}.
+N_DEVICES = (1, 2, 4, 8)     # paper used {1,2,3} GPUs; host-device counts
+                             # must divide the 8-device host pool, so powers
+                             # of two up to the full pool — the planner
+                             # (repro.perf.planner) plans over exactly this
+                             # axis, so the sweep must cover it in-support.
 BATCH_SIZES = (8, 16, 32, 64, 128)
 # Distribution extrinsics beyond the paper's table: the sharding strategy
 # and gradient wire format both reshape the communication term (the axis

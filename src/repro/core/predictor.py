@@ -92,10 +92,14 @@ class StepTimePredictor:
         return cls(model=fr.model, fit_result=fr)
 
     # -- launcher hooks ---------------------------------------------------------
+    # Predictions route through the shared feature→time path
+    # (repro.perf.predict.predict_samples) — the same code the LeNet
+    # sweep fits and the scenario planner searches consume.
     def predict_step_seconds(self, cfg: ModelConfig, shape: ShapeConfig,
                              n_chips: int) -> float:
+        from repro.perf.predict import predict_samples
         f = cell_features(cfg, shape, n_chips)
-        return float(self.model.predict([f])[0])
+        return float(predict_samples(self.model, [f])[0])
 
     def straggler_threshold(self, cfg, shape, n_chips,
                             tolerance: float = 1.5) -> float:
@@ -103,10 +107,14 @@ class StepTimePredictor:
 
     def rank_meshes(self, cfg: ModelConfig, shape: ShapeConfig,
                     candidates: Sequence[int]) -> List[Tuple[int, float]]:
-        """Rank chip counts (or mesh sizes) by predicted step time."""
-        scored = [(n, self.predict_step_seconds(cfg, shape, n))
-                  for n in candidates]
-        return sorted(scored, key=lambda kv: kv[1])
+        """Rank chip counts (or mesh sizes) by predicted step time —
+        one vectorized prediction over all candidates, not one encode
+        per candidate."""
+        from repro.perf.predict import predict_samples
+        samples = [cell_features(cfg, shape, n) for n in candidates]
+        times = predict_samples(self.model, samples)
+        return sorted(zip(candidates, (float(t) for t in times)),
+                      key=lambda kv: kv[1])
 
     def scaling_power_chips(self) -> float:
         """Fitted q for the chips axis (q=-1 ⇒ ideal scaling)."""

@@ -58,7 +58,11 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--compression", default="none",
                     choices=["none", "bf16", "int8", "int8_ef"])
     ap.add_argument("--strategy", default="fsdp_tp",
-                    choices=sorted(STRATEGIES))
+                    choices=sorted(STRATEGIES) + ["auto"],
+                    help="parallelism strategy; 'auto' defers to the "
+                         "scenario planner (repro.perf.planner), which "
+                         "ranks the feasible registry strategies by "
+                         "calibrated collective cost + memory headroom")
     ap.add_argument("--mode", default="auto",
                     choices=["auto", "sharded", "gspmd"],
                     help="sharded = shard_map with measured collectives; "
@@ -84,36 +88,18 @@ def build_parser() -> argparse.ArgumentParser:
 
 
 def _comm_estimate(cfg, args, n_dev: int):
-    """Schedule-level collective estimate for the run's strategy, priced
-    by the same calibrated link the sweep simulation loads."""
-    import jax
-    import numpy as np
+    """Schedule-level collective estimate for the run's strategy, via
+    the shared prediction path (repro.perf.predict) — the same assembly
+    the sweep simulation and the planner price with."""
+    from repro.perf.planner.space import model_comm_sizes
+    from repro.perf.predict import estimate_comm
 
     from repro.dist.compression import WIRE_BITS
-    from repro.models import model as MD
-    from repro.perf.costmodel import (ScheduleInputs, describe_schedule,
-                                      load_calibration, mesh_axes_for,
-                                      strategy_comm_seconds)
 
-    skeleton = jax.eval_shape(
-        lambda: MD.init_model(jax.random.PRNGKey(0), cfg))
-    param_bytes = sum(int(np.prod(x.shape)) * x.dtype.itemsize
-                      for x in jax.tree.leaves(skeleton))
-    # activations at the tp block boundaries: one [batch, seq, d_model]
-    # fp32 tensor per layer (what Megatron-style schedules all-reduce)
-    act_bytes = 4 * args.batch * args.seq * cfg.d_model * cfg.n_layers
-    inp = ScheduleInputs(n_devices=n_dev, param_bytes=param_bytes,
+    param_bytes, act_bytes = model_comm_sizes(cfg, args.batch, args.seq)
+    return estimate_comm(args.strategy, n_dev, param_bytes,
                          wire_bits=WIRE_BITS[args.compression],
-                         act_bytes=act_bytes)
-    cal = load_calibration()
-    return {"calibration": cal.label,
-            "strategy": args.strategy,
-            "mesh_axes": mesh_axes_for(args.strategy, n_dev),
-            "param_bytes": param_bytes,
-            "act_bytes": act_bytes,
-            "per_step_ms": strategy_comm_seconds(
-                args.strategy, inp, cal.links()) * 1e3,
-            "schedule": describe_schedule(args.strategy, inp, cal.links())}
+                         act_bytes=act_bytes, detail=True).to_dict()
 
 
 def _pick_mode(args, tcfg, mesh, n_dev: int):
@@ -173,6 +159,20 @@ def main(argv=None):
     n_dev = len(jax.devices())
     plan = plan_remesh(n_dev)
     mesh = make_mesh(plan.mesh_shape, ("data", "model"))
+    decision = None
+    if args.strategy == "auto":
+        from repro.perf.planner import choose_strategy
+        # feasibility is judged on the mesh this run will actually use
+        decision = choose_strategy(cfg, batch=args.batch, seq=args.seq,
+                                   n_devices=n_dev,
+                                   optimizer=args.optimizer,
+                                   compression=args.compression,
+                                   mesh_axes=dict(mesh.shape))
+        args.strategy = decision.strategy
+        note = "" if decision.calibrated else \
+            "  [uncalibrated α-β defaults in use]"
+        print(f"planner: --strategy auto -> {args.strategy} "
+              f"({decision.reason}){note}")
     path, path_reason = _pick_mode(args, tcfg, mesh, n_dev)
     print(f"devices={n_dev} mesh={plan.mesh_shape} "
           f"strategy={args.strategy} path={path} ({plan.reason}; "
@@ -189,8 +189,11 @@ def main(argv=None):
                "steps": args.steps, "batch": args.batch, "seq": args.seq}
         if comm is not None:
             out["comm"] = comm
+        if decision is not None:
+            out["planner"] = decision.to_dict()
         print(json.dumps(out))
-        return {"dry_run": True, "path": path, "comm": comm}
+        return {"dry_run": True, "path": path, "comm": comm,
+                "planner": None if decision is None else decision.to_dict()}
 
     key = jax.random.PRNGKey(args.seed)
     if path == "sharded":

@@ -116,23 +116,57 @@ class Calibration:
 
 DEFAULT_CALIBRATION = Calibration()
 
+REGEN_HINT = ("regenerate it with `PYTHONPATH=src python -m "
+              "repro.perf.costmodel.calibrate --rows "
+              "benchmarks/artifacts/lenet_sweep_measured.json` or the "
+              "full `python -m benchmarks.measured_sweep`")
 
-def load_calibration(path: Optional[str] = None) -> Calibration:
+
+def _fail_soft(path: str, problem: str, strict: bool) -> Calibration:
+    msg = (f"calibration artifact {path!r} {problem}; {REGEN_HINT}. "
+           f"Falling back to the uncalibrated α-β defaults "
+           f"(label 'default') — simulated times are NOT fitted to "
+           f"this host until the artifact exists.")
+    if strict:
+        raise FileNotFoundError(msg)
+    import warnings
+    warnings.warn(msg, stacklevel=3)
+    return DEFAULT_CALIBRATION
+
+
+def load_calibration(path: Optional[str] = None, *,
+                     strict: bool = False) -> Calibration:
     """Resolve the calibration every simulation consumer shares.
 
     Order: explicit ``path`` → $REPRO_CALIBRATION ("" or "none" forces
     the documented defaults) → the checked-in artifact → defaults.
+
+    A named artifact (explicit ``path`` or env var) that is missing or
+    unparsable fails *soft*: a warning with the regeneration command is
+    emitted and the documented defaults are returned, whose ``label`` is
+    ``"default"`` — consumers like the planner surface that as
+    "uncalibrated α-β defaults in use" instead of a raw file error.
+    ``strict=True`` restores the raising behaviour for callers that
+    must not run uncalibrated.
     """
     if path is None:
         env = os.environ.get(ENV_VAR)
         if env is not None:
             if env.strip().lower() in ("", "none", "default"):
                 return DEFAULT_CALIBRATION
-            return Calibration.load(env)
-        path = default_calibration_path()
-        if not os.path.exists(path):
-            return DEFAULT_CALIBRATION
-    return Calibration.load(path)
+            path = env
+        else:
+            path = default_calibration_path()
+            if not os.path.exists(path):
+                # the checked-in artifact is genuinely optional: absence
+                # is the documented default, not worth a warning
+                return DEFAULT_CALIBRATION
+    if not os.path.exists(path):
+        return _fail_soft(path, "does not exist", strict)
+    try:
+        return Calibration.load(path)
+    except (ValueError, KeyError, json.JSONDecodeError, OSError) as e:
+        return _fail_soft(path, f"failed to load ({e})", strict)
 
 
 # ---------------------------------------------------------------------------

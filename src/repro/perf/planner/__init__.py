@@ -1,0 +1,52 @@
+"""Scenario planner: invert the fitted model into launch recommendations.
+
+The decision layer on top of the repo's two fitted artifacts — the
+generic performance model (extrinsic powers fitted on the measured
+sweep) and the calibrated collective cost model — that turns "here is
+how time scales" into "launch *this*":
+
+  space    enumerate the feasible (strategy × devices × batch × wire
+           format) grid, reusing the distribution substrate's
+           divisibility/axis rules plus a per-device memory estimate
+  predict  vectorized time/throughput/efficiency per point, decomposed
+           into a fitted compute term and a calibrated comm term, with
+           uncertainty bands from the fit residuals
+  search   Pareto frontier over time × device-seconds × memory headroom
+           and constrained top-k picks
+  report   why each pick won, which term dominates, and the
+           predicted-vs-measured ranking metrics (Kendall τ, top-1
+           regret) the validation protocol checks in
+  auto     `--strategy auto` for the LM train/serve drivers
+
+End-to-end CLI: ``python -m benchmarks.plan`` (docs/PLANNER.md).
+"""
+from repro.perf.planner.auto import StrategyDecision, choose_strategy
+from repro.perf.planner.predict import (PlannerModel, Prediction,
+                                        UNCALIBRATED_NOTE,
+                                        default_model_path,
+                                        fit_planner_model, predict_points)
+from repro.perf.planner.report import (kendall_tau, plan_lines,
+                                       ranking_metrics, render_plan,
+                                       render_validation_md)
+from repro.perf.planner.search import (Constraints, OBJECTIVES,
+                                       execution_key, objective_value,
+                                       pareto_frontier, rank, top_k,
+                                       validation_slate)
+from repro.perf.planner.space import (DEFAULT_MEM_BUDGET_BYTES, Feasibility,
+                                      LaunchPoint, MemoryEstimate,
+                                      check_feasible, enumerate_lenet_space,
+                                      estimate_memory, lenet_memory,
+                                      model_comm_sizes, shard_divisor,
+                                      tree_shard_bytes)
+
+__all__ = [
+    "Constraints", "DEFAULT_MEM_BUDGET_BYTES", "Feasibility", "LaunchPoint",
+    "MemoryEstimate", "OBJECTIVES", "PlannerModel", "Prediction",
+    "StrategyDecision", "UNCALIBRATED_NOTE", "check_feasible",
+    "choose_strategy", "default_model_path", "enumerate_lenet_space",
+    "estimate_memory", "fit_planner_model", "kendall_tau", "lenet_memory",
+    "execution_key", "model_comm_sizes", "objective_value",
+    "pareto_frontier", "plan_lines", "predict_points", "rank",
+    "ranking_metrics", "render_plan", "render_validation_md",
+    "shard_divisor", "top_k", "tree_shard_bytes", "validation_slate",
+]

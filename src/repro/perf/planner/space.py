@@ -1,0 +1,342 @@
+"""Feasible launch-configuration space for the scenario planner.
+
+Two layers:
+
+* **generic** (any model with logical-axis ``Param`` annotations): the
+  sharding decisions are *not* re-derived here — ``tree_shard_bytes``
+  calls ``repro.dist.sharding.param_pspecs`` and converts the resolved
+  PartitionSpecs into per-device byte counts, so the planner's
+  feasibility is, by construction, the registry's own divisibility/
+  axis-reuse skipping (tested leaf-for-leaf in tests/test_planner.py);
+
+* **LeNet** (the measured-sweep subject): ``enumerate_lenet_space``
+  walks strategy × n_devices × batch × wire-format × intrinsics and
+  keeps the points the measured ``shard_map`` path can actually run —
+  the pool fits the trial, the global batch divides over the strategy's
+  data axis — attaching a per-device memory estimate built from the
+  *same* positional PartitionSpecs the measured path shards with
+  (``repro.perf.sweep._strategy_pspecs``).
+
+Memory model (per device, fp32): persistent parameter shard + optimizer
+copies of it + the activation working set of the per-device sub-batch,
+plus the two transient terms the current shard_map body really
+materializes — the in-body all-gather of the full parameter tree and
+the full-size gradient tree. ZeRO-style strategies therefore save
+persistent (param/opt) bytes but not the transient gather, exactly like
+the executable path (docs/PLANNER.md).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
+
+from repro.configs.lenet5 import (BATCH_SIZES, DATASET_SHAPES,
+                                  GRAD_COMPRESSIONS, LeNet5Config, N_CLASSES)
+from repro.dist.sharding import (MeshLike, STRATEGIES, axis_sizes,
+                                 param_pspecs, resolve_strategy)
+from repro.perf.costmodel import mesh_axes_for
+
+# Default planning pool sizes: the divisors of the forced 8-device host
+# pool (docs/METHODOLOGY.md). 8 extrapolates the fitted powers beyond
+# the Table-1 sweep values {1, 2, 4} — flagged in the plan report.
+POOL_DEVICES = (1, 2, 4, 8)
+
+# Persistent optimizer-state copies of the parameter shard, per
+# optimizer, for the two step implementations the planner prices:
+# the LeNet sweep step (stateless sgd; adam keeps m+v) and the LM
+# train step (sgd keeps momentum; adamw m+v; adafactor factored ~0).
+OPT_STATE_COPIES = {"sgd": 0.0, "adam": 2.0}
+LM_OPT_STATE_COPIES = {"sgd": 1.0, "adamw": 2.0, "adafactor": 0.0}
+
+DEFAULT_MEM_BUDGET_BYTES = 1 << 30     # 1 GiB/device planning envelope
+
+# Skip-reason sentinels (mirroring the sweep's sharded_skip vocabulary).
+SKIP_POOL = "pool-too-small"
+SKIP_BATCH = "batch-indivisible"
+SKIP_MEMORY = "memory-infeasible"
+
+
+# ---------------------------------------------------------------------------
+# Generic (registry-rule) shard/memory arithmetic
+# ---------------------------------------------------------------------------
+
+def shard_divisor(spec, sizes: Mapping[str, int]) -> int:
+    """How many ways a PartitionSpec splits an array: the product of the
+    mesh-axis sizes it names (axis-reuse prevention in the resolver
+    guarantees no axis is counted twice)."""
+    div = 1
+    for entry in tuple(spec):
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        for a in axes:
+            div *= int(sizes.get(a, 1))
+    return div
+
+
+def _leaf_bytes(leaf) -> int:
+    import numpy as np
+    shape = leaf.value.shape
+    itemsize = getattr(leaf.value.dtype, "itemsize", 4)
+    return int(np.prod(shape)) * int(itemsize) if shape else int(itemsize)
+
+
+def tree_shard_bytes(params, mesh: MeshLike,
+                     strategy: Union[str, object],
+                     pspecs=None) -> Tuple[int, int]:
+    """(full_bytes, per_device_bytes) of a Param tree under a strategy.
+
+    ``pspecs`` defaults to the registry resolution
+    (``dist.sharding.param_pspecs``) — the divisibility/axis rules are
+    reused, never re-implemented; pass explicit specs (e.g. the sweep's
+    positional LeNet specs) to price a differently-sharded tree.
+    """
+    import jax
+
+    from repro.models.layers import is_param
+
+    if pspecs is None:
+        pspecs = param_pspecs(params, mesh, strategy)
+    sizes = axis_sizes(mesh)
+    full = [0]
+    shard = [0]
+
+    def one(p, s):
+        b = _leaf_bytes(p)
+        full[0] += b
+        shard[0] += b // shard_divisor(s, sizes)
+        return None
+
+    jax.tree.map(one, params, pspecs, is_leaf=is_param)
+    return full[0], shard[0]
+
+
+@dataclass(frozen=True)
+class MemoryEstimate:
+    """Per-device bytes of one launch point (see module docstring)."""
+    params_full_bytes: int
+    params_per_device_bytes: int
+    opt_copies: float
+    act_per_device_bytes: int
+
+    @property
+    def opt_per_device_bytes(self) -> int:
+        return int(self.opt_copies * self.params_per_device_bytes)
+
+    @property
+    def gather_per_device_bytes(self) -> int:
+        """Transient full-parameter copy the shard_map body all-gathers
+        (zero under dp, where params are already full per device)."""
+        return self.params_full_bytes - self.params_per_device_bytes
+
+    @property
+    def grad_per_device_bytes(self) -> int:
+        """Transient full-size gradient tree (computed against the
+        gathered parameters before the reduce/shard)."""
+        return self.params_full_bytes
+
+    @property
+    def total_per_device_bytes(self) -> int:
+        return (self.params_per_device_bytes + self.opt_per_device_bytes
+                + self.act_per_device_bytes + self.gather_per_device_bytes
+                + self.grad_per_device_bytes)
+
+    def headroom_bytes(self, budget_bytes: int) -> int:
+        return int(budget_bytes) - self.total_per_device_bytes
+
+    def to_dict(self) -> Dict[str, int]:
+        return {"params_full": self.params_full_bytes,
+                "params_per_device": self.params_per_device_bytes,
+                "opt_per_device": self.opt_per_device_bytes,
+                "act_per_device": self.act_per_device_bytes,
+                "gather_per_device": self.gather_per_device_bytes,
+                "grad_per_device": self.grad_per_device_bytes,
+                "total_per_device": self.total_per_device_bytes}
+
+
+def estimate_memory(params, mesh: MeshLike, strategy: Union[str, object],
+                    *, opt_copies: float, act_per_device_bytes: int = 0,
+                    pspecs=None) -> MemoryEstimate:
+    """MemoryEstimate of any Param tree (arrays or eval_shape skeletons)
+    under a mesh/strategy — registry rules unless ``pspecs`` is given."""
+    full, shard = tree_shard_bytes(params, mesh, strategy, pspecs=pspecs)
+    return MemoryEstimate(params_full_bytes=full,
+                          params_per_device_bytes=shard,
+                          opt_copies=opt_copies,
+                          act_per_device_bytes=act_per_device_bytes)
+
+
+def model_comm_sizes(cfg, batch: int, seq: int,
+                     skeleton=None) -> Tuple[int, int]:
+    """(param_bytes, act_bytes) of an LM config — the schedule inputs
+    the train driver and the strategy chooser price collectives with.
+    Activations are the tp block boundaries: one [batch, seq, d_model]
+    fp32 tensor per layer (what Megatron-style schedules all-reduce).
+    Pass ``skeleton`` (the ``jax.eval_shape`` of ``init_model``) when
+    already built to skip re-tracing the model init."""
+    import jax
+    import numpy as np
+
+    from repro.models import model as MD
+
+    if skeleton is None:
+        skeleton = jax.eval_shape(
+            lambda: MD.init_model(jax.random.PRNGKey(0), cfg))
+    param_bytes = sum(int(np.prod(x.shape)) * x.dtype.itemsize
+                      for x in jax.tree.leaves(skeleton))
+    act_bytes = 4 * batch * seq * cfg.d_model * cfg.n_layers
+    return param_bytes, act_bytes
+
+
+# ---------------------------------------------------------------------------
+# LeNet (measured-sweep) launch points
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class LaunchPoint:
+    """One candidate launch configuration of the measured-sweep space."""
+    cfg: LeNet5Config
+    mesh_axes: Mapping[str, int] = field(hash=False, default=None)
+
+    @property
+    def strategy(self) -> str:
+        return self.cfg.strategy
+
+    @property
+    def n_devices(self) -> int:
+        return self.cfg.n_devices
+
+    @property
+    def batch_size(self) -> int:
+        return self.cfg.batch_size
+
+    @property
+    def compression(self) -> str:
+        return self.cfg.compression
+
+    def key(self) -> Tuple:
+        return (self.strategy, self.n_devices, self.batch_size,
+                self.compression)
+
+
+@dataclass(frozen=True)
+class Feasibility:
+    ok: bool
+    reasons: Tuple[str, ...]
+    memory: MemoryEstimate
+    mem_headroom_bytes: int
+
+
+def lenet_param_skeleton(cfg: LeNet5Config):
+    """Dry-run parameter skeleton (shapes/dtypes, no device arrays)."""
+    import jax
+
+    from repro.models.lenet import init_lenet
+    return jax.eval_shape(
+        lambda: init_lenet(jax.random.PRNGKey(0), cfg))
+
+
+def lenet_act_sample_bytes(cfg: LeNet5Config) -> int:
+    """fp32 bytes of one sample's activation working set: the input
+    image plus every conv/pool/dense output the forward pass holds."""
+    from repro.models.lenet import _conv_out, _pool_out
+
+    h, w, c = DATASET_SHAPES[cfg.dataset]
+    total = h * w * c
+    for i in range(2):
+        ch = cfg.n_filters if i == 0 else 2 * cfg.n_filters
+        h = _conv_out(h, cfg.kernel_size, cfg.stride, cfg.padding)
+        w = _conv_out(w, cfg.kernel_size, cfg.stride, cfg.padding)
+        total += h * w * ch
+        h = _pool_out(h, cfg.pool_size)
+        w = _pool_out(w, cfg.pool_size)
+        total += h * w * ch
+    total += 120 + 84 + N_CLASSES
+    return 4 * total
+
+
+def lenet_memory(cfg: LeNet5Config,
+                 mesh_axes: Optional[Mapping[str, int]] = None,
+                 skeleton=None) -> MemoryEstimate:
+    """Per-device memory of one LeNet launch point, priced against the
+    *same* positional PartitionSpecs the measured shard_map path shards
+    with (``repro.perf.sweep._strategy_pspecs``)."""
+    from repro.perf.sweep import _strategy_pspecs
+
+    axes = dict(mesh_axes if mesh_axes is not None
+                else mesh_axes_for(cfg.strategy, cfg.n_devices))
+    if skeleton is None:
+        skeleton = lenet_param_skeleton(cfg)
+    pspecs = _strategy_pspecs(skeleton, cfg.strategy, axes)
+    data = axes.get("data", 1)
+    per_dev_batch = max(cfg.batch_size // max(data, 1), 1)
+    return estimate_memory(
+        skeleton, axes, cfg.strategy, pspecs=pspecs,
+        opt_copies=OPT_STATE_COPIES.get(cfg.optimizer, 2.0),
+        act_per_device_bytes=per_dev_batch * lenet_act_sample_bytes(cfg))
+
+
+def check_feasible(cfg: LeNet5Config, *, pool: int,
+                   mem_budget_bytes: int = DEFAULT_MEM_BUDGET_BYTES,
+                   skeleton=None) -> Feasibility:
+    """Can the measured shard_map path actually run this point?
+
+    Infeasible when the host pool is smaller than n_devices, when the
+    global batch does not divide over the strategy's data axis (the
+    shard_map in_spec would reject it), or when the per-device memory
+    estimate exceeds the budget. Parameter dims that don't divide are
+    *not* infeasible — they stay unsharded (the registry's divisibility
+    skipping) and simply cost more memory.
+    """
+    axes = mesh_axes_for(cfg.strategy, cfg.n_devices)
+    reasons: List[str] = []
+    if cfg.n_devices > pool:
+        reasons.append(SKIP_POOL)
+    data = axes.get("data", 1)
+    if data > 1 and cfg.batch_size % data != 0:
+        reasons.append(SKIP_BATCH)
+    mem = lenet_memory(cfg, axes, skeleton=skeleton)
+    headroom = mem.headroom_bytes(mem_budget_bytes)
+    if headroom < 0:
+        reasons.append(SKIP_MEMORY)
+    return Feasibility(ok=not reasons, reasons=tuple(reasons),
+                       memory=mem, mem_headroom_bytes=headroom)
+
+
+def enumerate_lenet_space(
+        base: LeNet5Config, *, pool: int,
+        n_devices: Sequence[int] = POOL_DEVICES,
+        batches: Sequence[int] = BATCH_SIZES,
+        strategies: Sequence[str] = tuple(sorted(STRATEGIES)),
+        compressions: Sequence[str] = GRAD_COMPRESSIONS,
+        mem_budget_bytes: int = DEFAULT_MEM_BUDGET_BYTES,
+) -> Tuple[List[Tuple[LaunchPoint, Feasibility]],
+           List[Tuple[LaunchPoint, Feasibility]]]:
+    """(feasible, skipped) launch points over the extrinsic grid.
+
+    Intrinsics are pinned to ``base``; every extrinsic combination is
+    checked through ``check_feasible`` so the feasible set is exactly
+    what the measured path can execute under the memory budget.
+    """
+    import dataclasses
+
+    # parameter shapes depend on intrinsics only, which are pinned to
+    # ``base`` — one dry-run skeleton prices the whole grid
+    skeleton = lenet_param_skeleton(base)
+    feasible, skipped = [], []
+    for strategy in strategies:
+        resolve_strategy(strategy)          # fail fast on a typo
+        for n in n_devices:
+            for batch in batches:
+                for comp in compressions:
+                    cfg = dataclasses.replace(
+                        base, strategy=strategy, n_devices=int(n),
+                        batch_size=int(batch), compression=comp)
+                    feas = check_feasible(
+                        cfg, pool=pool, mem_budget_bytes=mem_budget_bytes,
+                        skeleton=skeleton)
+                    point = LaunchPoint(
+                        cfg=cfg,
+                        mesh_axes=mesh_axes_for(strategy, int(n)))
+                    (feasible if feas.ok else skipped).append((point, feas))
+    return feasible, skipped

@@ -48,9 +48,8 @@ from repro.data.synthetic import lenet_batch
 from repro.dist.compression import WIRE_BITS, compressed_psum_mean
 from repro.dist.sharding import gather_to_full, shard_of_full
 from repro.models.lenet import feature_dims, init_lenet, lenet_loss
-from repro.perf.costmodel import (Calibration, ScheduleInputs,
-                                  load_calibration, mesh_axes_for,
-                                  strategy_comm_seconds)
+from repro.perf.costmodel import (Calibration, load_calibration,
+                                  mesh_axes_for)
 from repro.perf.features import lenet_features
 
 MODES = ("jit", "jit_donate", "eager")
@@ -74,14 +73,15 @@ def lenet_act_bytes(cfg: LeNet5Config) -> int:
 def comm_seconds(cfg: LeNet5Config, param_bytes: int,
                  calibration: Optional[Calibration] = None) -> float:
     """Per-iteration communication time of one sampled scenario, priced
-    by the collective cost model under ``calibration`` (None = the
-    shared calibration resolved by ``load_calibration``: the checked-in
-    fitted artifact when present, the documented defaults otherwise)."""
-    cal = calibration if calibration is not None else load_calibration()
-    inp = ScheduleInputs(n_devices=cfg.n_devices, param_bytes=param_bytes,
+    through the shared prediction path (``repro.perf.predict``) under
+    ``calibration`` (None = the shared calibration resolved by
+    ``load_calibration``: the checked-in fitted artifact when present,
+    the documented defaults otherwise)."""
+    from repro.perf.predict import estimate_comm
+    return estimate_comm(cfg.strategy, cfg.n_devices, param_bytes,
                          wire_bits=WIRE_BITS[cfg.compression],
-                         act_bytes=lenet_act_bytes(cfg))
-    return strategy_comm_seconds(cfg.strategy, inp, cal.links())
+                         act_bytes=lenet_act_bytes(cfg),
+                         calibration=calibration).seconds
 
 
 def sample_config(rng: np.random.Generator) -> LeNet5Config:
@@ -200,10 +200,18 @@ def make_sharded_iteration(cfg: LeNet5Config, mode: str, mesh: Mesh,
     (``mesh_axes_for``): the batch is sharded over the "data" axis when
     the mesh has one (replicated over "model"), params enter sharded per
     ``_strategy_pspecs`` and are all-gathered in-body — the parameter
-    traffic the fsdp/tp schedules charge for — and gradients all-reduce-
-    mean through the compressed collective over *all* mesh axes (the
-    model-axis contributions are identical, so the mean is exact); the
-    optimizer then updates local shards.
+    traffic the fsdp-family schedules charge for — and gradients
+    all-reduce-mean through the compressed collective over *all* mesh
+    axes (the model-axis contributions are identical, so the mean is
+    exact); the optimizer then updates local shards.
+
+    NB the tp schedule (``STRATEGY_COLLECTIVES["tp"]``) describes
+    Megatron *activation* all-reduces, while this measured path — batch
+    replicated over "model", no in-block activation collectives — moves
+    model-axis parameter/gradient traffic instead; true tensor-parallel
+    compute partitioning in this body is the ROADMAP item that would
+    align the two, and until then tp calibration residuals price the
+    abstract schedule, not op-for-op traffic.
     """
     from jax.experimental.shard_map import shard_map
     from repro.models.layers import Param, is_param
@@ -374,8 +382,11 @@ def fit_target_ms(row: Dict, source: str = "simulated") -> float:
     extrinsic signal on this hardware and degenerate the fit.
 
     ``source`` picks the iteration time: "simulated" (per-device measured
-    compute + schedule-priced comm, the container default) or "measured"
-    (the real shard_map step — raises if the row has no measured column).
+    compute + schedule-priced comm, the container default), "measured"
+    (the real shard_map step — raises if the row has no measured column),
+    or "compute" (the per-device compute time alone, no comm term — the
+    target the planner's decomposed prediction fits, so its compute and
+    schedule terms stay separable).
     """
     b = row["features"]["batch_size"]
     if source == "measured":
@@ -385,6 +396,8 @@ def fit_target_ms(row: Dict, source: str = "simulated") -> float:
                              "(sweep ran without a device pool?)")
     elif source == "simulated":
         t = row["measured_ms"] + row["comm_ms"]
+    elif source == "compute":
+        t = row["measured_ms"]
     else:
         raise ValueError(f"unknown fit-target source {source!r}")
     return t * REF_SAMPLES / b

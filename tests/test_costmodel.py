@@ -222,3 +222,39 @@ def test_calibration_comparison_report():
     assert cmp["overall"]["default"]["mape"] > 0.0
     txt = calibration_report(rows, cal)
     assert "true-link" in txt and "overall" in txt
+
+
+def test_load_calibration_fails_soft_with_actionable_message(tmp_path):
+    """A missing/corrupt named artifact must warn (naming the regen
+    command) and fall back to the documented defaults — label "default",
+    which the planner surfaces as 'uncalibrated α-β defaults in use' —
+    instead of raising a raw file error. strict=True restores raising."""
+    import warnings
+
+    missing = os.path.join(tmp_path, "nope.json")
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        cal = load_calibration(missing)
+    assert cal.label == "default" and cal.default == DEFAULT_LINK
+    assert any("measured_sweep" in str(x.message) for x in w)
+
+    corrupt = os.path.join(tmp_path, "bad.json")
+    with open(corrupt, "w") as f:
+        f.write("{not json")
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        assert load_calibration(corrupt).label == "default"
+    assert any("failed to load" in str(x.message) for x in w)
+
+    # env-var pointing at a missing path fails soft the same way
+    os.environ["REPRO_CALIBRATION"] = missing
+    try:
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            assert load_calibration().label == "default"
+        assert w
+    finally:
+        del os.environ["REPRO_CALIBRATION"]
+
+    with pytest.raises(FileNotFoundError, match="measured_sweep"):
+        load_calibration(missing, strict=True)

@@ -1,0 +1,359 @@
+"""The scenario planner (repro.perf.planner).
+
+Four contracts under test:
+
+* **feasibility = the registry's rules** — the planner's shard/memory
+  accounting must match ``repro.dist.sharding`` divisibility/axis-reuse
+  skipping leaf-for-leaf, for every registry strategy on 1/2/4/8-device
+  meshes (it *calls* ``param_pspecs``, and this pins that it keeps
+  doing so);
+* **memory estimates = real array sizes** — the byte estimate must
+  equal the dry-run skeleton's (and the actually-initialized arrays')
+  sizes, not an approximation of them;
+* **search algebra** — Pareto dominance, constraint filtering, diverse
+  top-k, and the ranking metrics (Kendall τ, top-1 regret) the
+  validation protocol reports;
+* **prediction plumbing** — the decomposed predictor's arithmetic
+  (sub-batch anchoring, oversubscription, comm pricing, bands) on a
+  hand-built model with known constants.
+"""
+import dataclasses
+import json
+import math
+import os
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.configs.lenet5 import (BATCH_SIZES, DIST_STRATEGIES,
+                                  LeNet5Config)
+from repro.core.generic_model import PerfModel
+from repro.dist.sharding import STRATEGIES, param_pspecs
+from repro.perf.costmodel import Calibration, mesh_axes_for
+from repro.perf.costmodel.primitives import LinkParams
+from repro.perf.features import LENET_SPEC
+from repro.perf.planner import (Constraints, LaunchPoint, PlannerModel,
+                                UNCALIBRATED_NOTE, check_feasible,
+                                choose_strategy, enumerate_lenet_space,
+                                kendall_tau, lenet_memory, pareto_frontier,
+                                predict_points, ranking_metrics,
+                                shard_divisor, top_k, tree_shard_bytes)
+from repro.perf.planner.predict import Prediction, _sub_batch
+from repro.perf.planner.space import (Feasibility, SKIP_BATCH, SKIP_MEMORY,
+                                      SKIP_POOL, lenet_param_skeleton)
+
+MESH_SIZES = (1, 2, 4, 8)
+
+
+# ---------------------------------------------------------------------------
+# Feasibility: exact match with dist.sharding resolution
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy", sorted(STRATEGIES))
+@pytest.mark.parametrize("n", MESH_SIZES)
+def test_shard_bytes_match_registry_resolution(strategy, n, lm_skeleton):
+    """Planner shard accounting == ``param_pspecs`` output, leaf by leaf,
+    with divisibility and axis-reuse honoured, on every registry
+    strategy × mesh size."""
+    import jax
+
+    from repro.models.layers import is_param
+
+    mesh = mesh_axes_for(strategy, n)
+    pspecs = param_pspecs(lm_skeleton, mesh, strategy)
+    full, shard = tree_shard_bytes(lm_skeleton, mesh, strategy)
+
+    exp_full, exp_shard = [0], [0]
+
+    def one(p, spec):
+        b = int(np.prod(p.value.shape)) * p.value.dtype.itemsize
+        used = []
+        div = 1
+        for dim, entry in zip(p.value.shape,
+                              tuple(spec) + (None,) * p.value.ndim):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            d = 1
+            for a in axes:
+                assert a not in used, "mesh axis reused within one array"
+                used.append(a)
+                d *= mesh[a]
+            assert dim % d == 0, "registry sharded a non-divisible dim"
+            div *= d
+        exp_full[0] += b
+        exp_shard[0] += b // div
+        return None
+
+    jax.tree.map(one, lm_skeleton, pspecs, is_leaf=is_param)
+    assert full == exp_full[0]
+    assert shard == exp_shard[0]
+
+
+@pytest.fixture(scope="module")
+def lm_skeleton():
+    import jax
+
+    from repro.configs import get_config, reduced
+    from repro.models import model as MD
+
+    cfg = reduced(get_config("smollm-360m"))
+    return jax.eval_shape(lambda: MD.init_model(jax.random.PRNGKey(0), cfg))
+
+
+def test_shard_divisor_reads_specs():
+    from jax.sharding import PartitionSpec as P
+    sizes = {"data": 4, "model": 2}
+    assert shard_divisor(P(), sizes) == 1
+    assert shard_divisor(P("data"), sizes) == 4
+    assert shard_divisor(P(None, "model"), sizes) == 2
+    assert shard_divisor(P(("model", "data"),), sizes) == 8
+
+
+@pytest.mark.parametrize("strategy", DIST_STRATEGIES)
+def test_lenet_feasible_set_matches_executable_constraints(strategy):
+    """The feasible set must be exactly what the measured shard_map path
+    can run: pool fits, batch divides over the strategy's data axis."""
+    pool = 8
+    base = LeNet5Config(strategy=strategy)
+    skel = lenet_param_skeleton(base)
+    for n in MESH_SIZES + (16,):
+        data = mesh_axes_for(strategy, n).get("data", 1)
+        for batch in BATCH_SIZES + (12,):
+            cfg = dataclasses.replace(base, n_devices=n, batch_size=batch)
+            feas = check_feasible(cfg, pool=pool, skeleton=skel)
+            expect_pool = n <= pool
+            expect_batch = data <= 1 or batch % data == 0
+            assert feas.ok == (expect_pool and expect_batch), (n, batch)
+            if not expect_pool:
+                assert SKIP_POOL in feas.reasons
+            if not expect_batch:
+                assert SKIP_BATCH in feas.reasons
+
+
+def test_enumerate_space_covers_grid_and_flags_memory():
+    base = LeNet5Config()
+    feasible, skipped = enumerate_lenet_space(base, pool=8)
+    n_expected = (len(STRATEGIES) * len(MESH_SIZES) * len(BATCH_SIZES) * 3)
+    assert len(feasible) + len(skipped) == n_expected
+    assert feasible, "default grid must have feasible points"
+    # a tiny budget turns every point memory-infeasible
+    feasible2, skipped2 = enumerate_lenet_space(base, pool=8,
+                                                mem_budget_bytes=1024)
+    assert not feasible2
+    assert all(SKIP_MEMORY in f.reasons for _, f in skipped2)
+
+
+# ---------------------------------------------------------------------------
+# Memory: byte estimates vs real dryrun/initialized array sizes
+# ---------------------------------------------------------------------------
+
+def test_lenet_memory_matches_real_array_bytes():
+    import jax
+
+    from repro.models.lenet import init_lenet
+
+    cfg = LeNet5Config(strategy="fsdp", n_devices=4, batch_size=32)
+    mem = lenet_memory(cfg)
+    real = sum(x.nbytes for x in jax.tree.leaves(
+        init_lenet(jax.random.PRNGKey(0), cfg)))
+    assert mem.params_full_bytes == real
+    # the sharded estimate must re-assemble to the full set over the mesh
+    # for every leaf the positional specs actually sharded
+    assert 0 < mem.params_per_device_bytes <= mem.params_full_bytes
+    assert mem.total_per_device_bytes == (
+        mem.params_per_device_bytes + mem.opt_per_device_bytes
+        + mem.act_per_device_bytes + mem.gather_per_device_bytes
+        + mem.grad_per_device_bytes)
+
+
+def test_lenet_memory_strategy_and_optimizer_sensitivity():
+    dp = lenet_memory(LeNet5Config(strategy="dp", n_devices=4))
+    fsdp = lenet_memory(LeNet5Config(strategy="fsdp", n_devices=4))
+    assert dp.params_per_device_bytes == dp.params_full_bytes
+    assert fsdp.params_per_device_bytes < fsdp.params_full_bytes
+    sgd = lenet_memory(LeNet5Config(optimizer="sgd"))
+    adam = lenet_memory(LeNet5Config(optimizer="adam"))
+    assert sgd.opt_per_device_bytes == 0           # stateless sweep sgd
+    assert adam.opt_per_device_bytes == 2 * adam.params_per_device_bytes
+
+
+def test_act_bytes_scale_with_batch_and_shards():
+    m1 = lenet_memory(LeNet5Config(strategy="dp", n_devices=1,
+                                   batch_size=32))
+    m4 = lenet_memory(LeNet5Config(strategy="dp", n_devices=4,
+                                   batch_size=32))
+    assert m1.act_per_device_bytes == 4 * m4.act_per_device_bytes
+    # tp replicates the batch over the model axis: no activation saving
+    t4 = lenet_memory(LeNet5Config(strategy="tp", n_devices=4,
+                                   batch_size=32))
+    assert t4.act_per_device_bytes == m1.act_per_device_bytes
+
+
+# ---------------------------------------------------------------------------
+# Search algebra
+# ---------------------------------------------------------------------------
+
+def _mk_pred(time_ms, n_devices=1, headroom=100, strategy="dp", batch=32):
+    cfg = LeNet5Config(strategy=strategy, n_devices=n_devices,
+                       batch_size=batch)
+    point = LaunchPoint(cfg=cfg, mesh_axes={"data": n_devices})
+    feas = Feasibility(ok=True, reasons=(), memory=None,
+                       mem_headroom_bytes=headroom)
+    thru = 128 / (time_ms * 1e-3)
+    return Prediction(point=point, feasibility=feas, compute_ms=time_ms,
+                      comm_ms=0.0, time_ms=time_ms, lo_ms=time_ms,
+                      hi_ms=time_ms, step_ms=time_ms * batch / 128,
+                      throughput_sps=thru,
+                      efficiency_sps_per_device=thru / n_devices,
+                      device_seconds=time_ms * 1e-3 * n_devices,
+                      mem_headroom_bytes=headroom,
+                      dominant_term="compute", comm=None)
+
+
+def test_pareto_frontier_drops_dominated_points():
+    a = _mk_pred(10.0, n_devices=1, headroom=100)
+    b = _mk_pred(20.0, n_devices=1, headroom=100)   # dominated by a
+    c = _mk_pred(5.0, n_devices=8, headroom=100)    # faster, more devices
+    d = _mk_pred(10.0, n_devices=1, headroom=50)    # dominated by a
+    front = pareto_frontier([a, b, c, d])
+    assert a in front and c in front
+    assert b not in front and d not in front
+
+
+def test_pareto_keeps_one_of_exact_ties():
+    a = _mk_pred(10.0)
+    b = _mk_pred(10.0)
+    assert len(pareto_frontier([a, b])) == 1
+
+
+def test_top_k_constraints_and_diversity():
+    preds = [_mk_pred(10.0 + i, n_devices=n, strategy=s)
+             for i, (s, n) in enumerate(
+                 [(s, n) for s in ("dp", "fsdp") for n in (1, 2, 4)])]
+    got = top_k(preds, 3, constraints=Constraints(max_devices=2))
+    assert all(p.point.n_devices <= 2 for p in got)
+    div = top_k(preds, 4, diverse_by=("strategy", "n_devices"))
+    cells = {(p.point.strategy, p.point.n_devices) for p in div}
+    assert len(cells) == 4
+    # objective ordering preserved
+    assert [p.time_ms for p in div] == sorted(p.time_ms for p in div)
+
+
+def test_kendall_tau_and_ranking_metrics():
+    assert kendall_tau([1, 2, 3, 4], [10, 20, 30, 40]) == 1.0
+    assert kendall_tau([1, 2, 3, 4], [40, 30, 20, 10]) == -1.0
+    m = ranking_metrics([1.0, 2.0, 3.0], [5.0, 9.0, 7.0])
+    assert m["top1_measured_rank"] == 1
+    assert m["top1_regret"] == 0.0
+    assert m["top1_in_measured_top3"]
+    m2 = ranking_metrics([1.0, 2.0, 3.0, 4.0], [9.0, 1.0, 2.0, 3.0])
+    assert m2["top1_measured_rank"] == 4
+    assert not m2["top1_in_measured_top3"]
+    assert m2["top1_regret"] == pytest.approx(8.0)
+
+
+# ---------------------------------------------------------------------------
+# Decomposed prediction arithmetic
+# ---------------------------------------------------------------------------
+
+def _constant_model(C=64.0, k=2.0, link=LinkParams(1e-4, 1e8)):
+    """PlannerModel whose compute prediction is exactly C fixed-work ms."""
+    x = np.zeros(LENET_SPEC.n_params)
+    x[-1] = C
+    cal = Calibration(label="planner:test", default=link,
+                      meta={"mae_ms_fitted": 0.0})
+    return PlannerModel(compute=PerfModel(LENET_SPEC, x), compute_mape=0.25,
+                        oversub_k=k, calibration=cal, band_mape=0.25)
+
+
+def test_sub_batch_anchoring():
+    assert _sub_batch("dp", 4, 64) == 16
+    assert _sub_batch("tp", 4, 64) == 64        # batch replicated over model
+    assert _sub_batch("fsdp_tp", 8, 64) == 16   # data axis is 4
+    assert _sub_batch("dp", 8, 8) == 1
+
+
+def test_predict_points_decomposition():
+    from repro.perf.predict import estimate_comm
+    from repro.perf.sweep import REF_SAMPLES, lenet_act_bytes
+
+    model = _constant_model(C=64.0, k=2.0)
+    base = LeNet5Config(strategy="dp", n_devices=4, batch_size=64,
+                        compression="int8")
+    feasible, _ = enumerate_lenet_space(
+        base, pool=8, n_devices=(4,), batches=(64,), strategies=("dp",),
+        compressions=("int8",))
+    [pred] = predict_points(model, feasible)
+    # compute: C fixed-work at sub-batch 16 -> per-step 64*16/128 = 8ms,
+    # oversubscribed by 4/2 -> 16ms; fixed-work scale 2 -> 32ms
+    assert pred.compute_ms == pytest.approx(32.0, rel=1e-6)
+    comm = estimate_comm("dp", 4, feasible[0][1].memory.params_full_bytes,
+                         wire_bits=8, act_bytes=lenet_act_bytes(base),
+                         calibration=model.calibration)
+    assert pred.comm_ms == pytest.approx(
+        comm.seconds * 1e3 * REF_SAMPLES / 64, rel=1e-6)
+    assert pred.time_ms == pytest.approx(pred.compute_ms + pred.comm_ms)
+    assert pred.lo_ms <= pred.time_ms <= pred.hi_ms
+    assert pred.step_ms == pytest.approx(pred.time_ms / 2)
+    assert pred.throughput_sps == pytest.approx(
+        REF_SAMPLES / (pred.time_ms * 1e-3))
+    assert pred.device_seconds == pytest.approx(pred.time_ms * 4e-3)
+
+
+def test_planner_model_roundtrip(tmp_path):
+    model = _constant_model()
+    path = os.path.join(tmp_path, "m.json")
+    model.save(path)
+    back = PlannerModel.load(path)
+    assert np.allclose(back.compute.x, model.compute.x)
+    assert back.oversub_k == model.oversub_k
+    assert back.calibration.label == "planner:test"
+    assert back.band_mape == model.band_mape
+    # schema guard: wrong constant count must point at --refit
+    blob = json.load(open(path))
+    blob["x"] = blob["x"][:-2]
+    json.dump(blob, open(path, "w"))
+    with pytest.raises(ValueError, match="refit"):
+        PlannerModel.load(path)
+
+
+def test_missing_model_artifact_is_actionable(tmp_path):
+    with pytest.raises(FileNotFoundError, match="--refit"):
+        PlannerModel.load(os.path.join(tmp_path, "nope.json"))
+
+
+def test_uncalibrated_note_surfaces():
+    model = _constant_model()
+    model.calibration = Calibration()        # the documented defaults
+    assert UNCALIBRATED_NOTE in model.calibration_note()
+
+
+# ---------------------------------------------------------------------------
+# --strategy auto (LM path)
+# ---------------------------------------------------------------------------
+
+def test_choose_strategy_lm():
+    from repro.configs import get_config, reduced
+
+    cfg = reduced(get_config("smollm-360m"))
+    d = choose_strategy(cfg, batch=8, seq=32, n_devices=4,
+                        optimizer="adamw", compression="none")
+    assert d.strategy in STRATEGIES
+    blob = d.to_dict()
+    assert len(blob["candidates"]) == len(STRATEGIES)
+    assert all("comm_ms" in c and "feasible" in c
+               for c in blob["candidates"])
+    # indivisible batch knocks out data-sharded strategies
+    d2 = choose_strategy(cfg, batch=7, seq=32, n_devices=4,
+                         optimizer="adamw", compression="none")
+    cand = {c["strategy"]: c for c in d2.to_dict()["candidates"]}
+    assert not cand["dp"]["feasible"]
+    assert cand["tp"]["feasible"]              # tp has no data axis
+    # an impossible budget still returns a least-bad decision
+    d3 = choose_strategy(cfg, batch=8, seq=32, n_devices=4,
+                         optimizer="adamw", compression="none",
+                         mem_budget_bytes=1)
+    assert d3.strategy in STRATEGIES
+    assert "least-bad" in d3.reason

@@ -1,0 +1,87 @@
+"""CI smoke for the scenario planner: plan on the forced pool → assert.
+
+  PYTHONPATH=src python tools/planner_smoke.py
+
+Runs ``benchmarks.plan`` in dry-run mode (no measurement, no writes) on
+the forced 8-device host pool and asserts the plan's contract — a
+non-empty Pareto frontier, a full top-k slate drawn from the feasible
+set, calibration provenance on every number — then repeats the plan
+with the calibration artifact forcibly absent to check the fail-soft
+path: the planner must still plan, reporting the uncalibrated defaults
+instead of surfacing a raw file error.
+
+Exit code 0 = plan valid under both calibrations; anything else fails CI.
+"""
+import os
+import sys
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_REPO, "src"))
+sys.path.insert(0, _REPO)                    # the benchmarks package
+
+# must run before the jax backend initializes
+from repro.launch.train import DEFAULT_POOL, _force_host_pool  # noqa: E402
+
+_force_host_pool(DEFAULT_POOL)
+
+import json      # noqa: E402
+import time      # noqa: E402
+import warnings  # noqa: E402
+
+
+def _assert_plan(plan, *, expect_calibrated):
+    assert plan["feasible"] > 0, "no feasible launch points"
+    assert plan["frontier_size"] >= 1, "empty Pareto frontier"
+    assert plan["frontier"], "frontier details missing"
+    assert len(plan["top"]) >= 8, f"slate too small: {len(plan['top'])}"
+    for p in plan["top"]:
+        assert p["time_ms"] > 0 and p["compute_ms"] > 0
+        assert p["band_ms"][0] <= p["time_ms"] <= p["band_ms"][1]
+        assert p["memory"]["total_per_device"] > 0
+    assert plan["calibrated"] == expect_calibrated, (
+        plan["calibration"], expect_calibrated)
+    # the frontier's fastest point must also lead the time-ranked slate
+    assert (plan["frontier"][0]["time_ms"]
+            <= plan["top"][0]["time_ms"] + 1e-9)
+
+
+def main():
+    from benchmarks.plan import main as plan_main
+
+    t0 = time.time()
+    plan = plan_main(["--dry-run", "--k", "10"])
+    _assert_plan(plan, expect_calibrated=True)
+
+    # fail-soft: a planner model whose embedded calibration is absent
+    # while the shared artifact is unreachable must still plan — under
+    # the uncalibrated defaults, reported as such, never a raw file
+    # error (repro.perf.costmodel.load_calibration fail-soft contract)
+    from repro.perf.planner import default_model_path
+
+    with open(default_model_path()) as f:
+        blob = json.load(f)
+    blob["calibration"] = None
+    stripped = "/tmp/planner_model_nocal.json"
+    with open(stripped, "w") as f:
+        json.dump(blob, f)
+    os.environ["REPRO_CALIBRATION"] = "/nonexistent/calibration.json"
+    try:
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            plan2 = plan_main(["--dry-run", "--k", "10",
+                               "--model", stripped])
+    finally:
+        del os.environ["REPRO_CALIBRATION"]
+    _assert_plan(plan2, expect_calibrated=False)
+
+    print(json.dumps({"ok": True,
+                      "feasible": plan["feasible"],
+                      "frontier_size": plan["frontier_size"],
+                      "calibrations": [plan["calibration"],
+                                       plan2["calibration"]],
+                      "wall_s": round(time.time() - t0, 1)}))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -312,6 +312,52 @@ def _fit_shared(H, V, y, *, seeds, maxiter) -> Tuple[LinkParams, float]:
 
 
 # ---------------------------------------------------------------------------
+# Cross-family calibration (the arch sweep's transfer question)
+# ---------------------------------------------------------------------------
+
+def fit_family_calibrations(rows_by_family: Mapping[str, Sequence[Mapping]],
+                            *, per_collective: bool = False,
+                            seeds: Sequence[int] = (0, 1, 2),
+                            maxiter: int = 200,
+                            source: str = "") -> Dict[str, Calibration]:
+    """One fitted Calibration per architecture family (labels
+    ``fitted:<family>``). Families whose rows cannot constrain a link
+    (no multi-device sharded measurements) are silently absent — the
+    transfer matrix then simply has no row for them."""
+    out: Dict[str, Calibration] = {}
+    for family, rows in rows_by_family.items():
+        if not calibration_rows(rows):
+            continue
+        out[family] = fit_calibration(rows, per_collective=per_collective,
+                                      seeds=seeds, maxiter=maxiter,
+                                      label=f"fitted:{family}",
+                                      source=source or family)
+    return out
+
+
+def link_transfer_matrix(rows_by_family: Mapping[str, Sequence[Mapping]],
+                         calibrations: Mapping[str, Calibration]
+                         ) -> Dict[str, Dict[str, float]]:
+    """``matrix[fit_family][eval_family]`` = residual MAE (ms) of the
+    link fitted on one family priced on another family's rows — the
+    paper-level question of whether calibrated link parameters are a
+    property of the *interconnect* (they should transfer across
+    families without refitting) or leak workload shape. The diagonal is
+    each family's own fit; ``matrix["default"]`` prices every family
+    with the uncalibrated α-β defaults as the no-fit baseline."""
+    evals = {f: calibration_rows(rows)
+             for f, rows in rows_by_family.items()}
+    evals = {f: r for f, r in evals.items() if r}
+    matrix: Dict[str, Dict[str, float]] = {}
+    for fit_f, cal in calibrations.items():
+        matrix[fit_f] = {ev_f: dataset_mae_s(rows, cal.links()) * 1e3
+                         for ev_f, rows in evals.items()}
+    matrix["default"] = {ev_f: dataset_mae_s(rows, DEFAULT_LINK) * 1e3
+                         for ev_f, rows in evals.items()}
+    return matrix
+
+
+# ---------------------------------------------------------------------------
 # Re-simulation (calibrated-vs-default comparison)
 # ---------------------------------------------------------------------------
 

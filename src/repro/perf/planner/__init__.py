@@ -32,21 +32,30 @@ from repro.perf.planner.search import (Constraints, OBJECTIVES,
                                        execution_key, objective_value,
                                        pareto_frontier, rank, top_k,
                                        validation_slate)
-from repro.perf.planner.space import (DEFAULT_MEM_BUDGET_BYTES, Feasibility,
+from repro.perf.planner.space import (ArchLaunchPoint,
+                                      DEFAULT_MEM_BUDGET_BYTES, Feasibility,
                                       LaunchPoint, MemoryEstimate,
-                                      check_feasible, enumerate_lenet_space,
-                                      estimate_memory, lenet_memory,
-                                      model_comm_sizes, shard_divisor,
+                                      check_feasible, check_feasible_model,
+                                      enumerate_lenet_space, enumerate_space,
+                                      estimate_memory, estimate_memory_for,
+                                      lenet_memory, model_comm_sizes,
+                                      model_memory, shard_divisor,
                                       tree_shard_bytes)
 
+# ``enumerate_space`` / ``estimate_memory_for`` are the generic entry
+# points (dispatching on the config's architecture); the LeNet-named
+# exports remain as the family-specific layer they alias into.
+
 __all__ = [
-    "Constraints", "DEFAULT_MEM_BUDGET_BYTES", "Feasibility", "LaunchPoint",
-    "MemoryEstimate", "OBJECTIVES", "PlannerModel", "Prediction",
-    "StrategyDecision", "UNCALIBRATED_NOTE", "check_feasible",
-    "choose_strategy", "default_model_path", "enumerate_lenet_space",
-    "estimate_memory", "fit_planner_model", "kendall_tau", "lenet_memory",
-    "execution_key", "model_comm_sizes", "objective_value",
-    "pareto_frontier", "plan_lines", "predict_points", "rank",
-    "ranking_metrics", "render_plan", "render_validation_md",
-    "shard_divisor", "top_k", "tree_shard_bytes", "validation_slate",
+    "ArchLaunchPoint", "Constraints", "DEFAULT_MEM_BUDGET_BYTES",
+    "Feasibility", "LaunchPoint", "MemoryEstimate", "OBJECTIVES",
+    "PlannerModel", "Prediction", "StrategyDecision", "UNCALIBRATED_NOTE",
+    "check_feasible", "check_feasible_model", "choose_strategy",
+    "default_model_path", "enumerate_lenet_space", "enumerate_space",
+    "estimate_memory", "estimate_memory_for", "fit_planner_model",
+    "kendall_tau", "lenet_memory", "execution_key", "model_comm_sizes",
+    "model_memory", "objective_value", "pareto_frontier", "plan_lines",
+    "predict_points", "rank", "ranking_metrics", "render_plan",
+    "render_validation_md", "shard_divisor", "top_k", "tree_shard_bytes",
+    "validation_slate",
 ]

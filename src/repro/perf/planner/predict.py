@@ -43,7 +43,7 @@ import numpy as np
 from repro.core.generic_model import PerfModel
 from repro.perf.costmodel import Calibration, load_calibration
 from repro.perf.costmodel.primitives import LinkParams
-from repro.perf.features import LENET_SPEC, lenet_features
+from repro.perf.features import get_spec, spec_for_tag
 from repro.perf.planner.space import Feasibility, LaunchPoint
 from repro.perf.predict import CommEstimate, estimate_comm, predict_samples
 
@@ -72,6 +72,10 @@ class PlannerModel:
     calibration: Calibration = field(default_factory=load_calibration)
     band_mape: float = 0.0          # this predictor vs measured shard_map
     meta: Dict = field(default_factory=dict)
+    # which feature spec shaped the constant vector — resolved back
+    # through the per-architecture registry on load, so one PlannerModel
+    # class serves every family (repro.perf.features.spec_for_tag).
+    spec_tag: str = "lenet-table1-v1"
 
     @property
     def calibrated(self) -> bool:
@@ -87,7 +91,7 @@ class PlannerModel:
     # -- persistence --------------------------------------------------------
     def to_dict(self) -> Dict:
         return {"version": MODEL_SCHEMA_VERSION,
-                "spec": "lenet-table1-v1",
+                "spec": self.spec_tag,
                 "x": np.asarray(self.compute.x, float).tolist(),
                 "x_seeds": (None if self.compute.x_seeds is None else
                             np.asarray(self.compute.x_seeds,
@@ -110,14 +114,16 @@ class PlannerModel:
                 f"unsupported planner-model schema version "
                 f"{d.get('version')!r} (want {MODEL_SCHEMA_VERSION}) — "
                 f"refit with `python -m benchmarks.plan --refit`")
+        tag = str(d.get("spec", "lenet-table1-v1"))
+        spec = spec_for_tag(tag).spec          # KeyError on unknown tags
         x = np.asarray(d["x"], float)
-        if len(x) != LENET_SPEC.n_params:
+        if len(x) != spec.n_params:
             raise ValueError(
-                f"planner model has {len(x)} constants but LENET_SPEC "
-                f"needs {LENET_SPEC.n_params} — refit with "
+                f"planner model has {len(x)} constants but spec "
+                f"{tag!r} needs {spec.n_params} — refit with "
                 f"`python -m benchmarks.plan --refit`")
         xs = d.get("x_seeds")
-        model = PerfModel(LENET_SPEC, x,
+        model = PerfModel(spec, x,
                           x_seeds=None if xs is None else np.asarray(xs))
         cal = (Calibration.from_dict(d["calibration"])
                if d.get("calibration") else load_calibration())
@@ -125,7 +131,7 @@ class PlannerModel:
                    oversub_k=float(d.get("oversub_k", 1.0)),
                    calibration=cal,
                    band_mape=float(d.get("band_mape", 0.0)),
-                   meta=dict(d.get("meta", {})))
+                   meta=dict(d.get("meta", {})), spec_tag=tag)
 
     @classmethod
     def load(cls, path: Optional[str] = None) -> "PlannerModel":
@@ -167,19 +173,30 @@ def _compute_samples(feature_rows: Sequence[Mapping]) -> List[Dict]:
     return out
 
 
+def _ref_work_scale(spec_tag: str,
+                    feature_rows: Sequence[Mapping]) -> np.ndarray:
+    """Per-row fraction of the fixed work unit one iteration performs —
+    batch/REF_SAMPLES for sample-normalized specs, batch·seq/REF_TOKENS
+    for token-normalized ones (the spec's ``norm_unit``)."""
+    from repro.perf.sweep import REF_SAMPLES, REF_TOKENS
+
+    b = np.array([float(f["batch_size"]) for f in feature_rows])
+    if spec_for_tag(spec_tag).norm_unit == "token":
+        seq = np.array([float(f["seq_len"]) for f in feature_rows])
+        return b * seq / REF_TOKENS
+    return b / REF_SAMPLES
+
+
 def _predict_step_ms(model: "PlannerModel",
                      feature_rows: Sequence[Mapping],
                      comm_step_ms: np.ndarray
                      ) -> Tuple[np.ndarray, np.ndarray]:
     """(compute_step_ms, total_step_ms) per feature row, vectorized."""
-    from repro.perf.sweep import REF_SAMPLES
-
     samples = _compute_samples(feature_rows)
     comp_fw_sub = np.asarray(predict_samples(model.compute, samples), float)
-    subs = np.array([s["batch_size"] for s in samples], float)
     over = np.array([model.oversub(int(f["n_devices"]))
                      for f in feature_rows])
-    comp_step = comp_fw_sub * subs / REF_SAMPLES * over
+    comp_step = comp_fw_sub * _ref_work_scale(model.spec_tag, samples) * over
     return comp_step, comp_step + np.asarray(comm_step_ms, float)
 
 
@@ -252,22 +269,25 @@ def evaluate_on_rows(model: "PlannerModel",
 
 def fit_planner_model(rows: Sequence[Dict], *, mode: str = "jit",
                       seeds: Sequence[int] = tuple(range(4)),
-                      maxiter: int = 300,
-                      source: str = "") -> PlannerModel:
-    """Fit compute model + oversubscription decomposition from sweep rows."""
+                      maxiter: int = 300, source: str = "",
+                      family: str = "lenet") -> PlannerModel:
+    """Fit compute model + oversubscription decomposition from sweep rows
+    of one architecture ``family`` (its registry spec shapes the fit)."""
     from repro.core.fit import fit_sweep_rows
 
-    r, n_fit, n_test = fit_sweep_rows(LENET_SPEC, rows, mode, "compute",
+    aspec = get_spec(family)
+    r, n_fit, n_test = fit_sweep_rows(aspec.spec, rows, mode, "compute",
                                       seeds=tuple(seeds), maxiter=maxiter)
     k, cal, decomp_meta = _fit_decomposition(rows, seeds=seeds,
                                              maxiter=maxiter)
     meta = {"target": "compute", "mode": mode, "n_fit": n_fit,
             "n_test": n_test, "seeds": list(seeds), "maxiter": int(maxiter),
             "source": source, "test_metrics": r.test_metrics,
-            "decomposition": decomp_meta}
+            "family": family, "decomposition": decomp_meta}
     model = PlannerModel(compute=r.model,
                          compute_mape=float(r.test_metrics["mape"]),
-                         oversub_k=k, calibration=cal, meta=meta)
+                         oversub_k=k, calibration=cal, meta=meta,
+                         spec_tag=aspec.spec_tag)
     ev = evaluate_on_rows(model, rows)
     model.band_mape = ev["mape"]
     model.meta["eval_vs_measured"] = ev
@@ -339,30 +359,34 @@ def predict_points(model: PlannerModel,
     decomposition calibration. The band is ``±band_mape`` — the MAPE of
     this exact predictor against the measured shard_map rows.
     """
-    from repro.perf.sweep import REF_SAMPLES, lenet_act_bytes
+    from repro.perf.sweep import REF_SAMPLES, REF_TOKENS
 
     if not points:
         return []
-    feature_rows = [lenet_features(p.cfg) for p, _ in points]
+    aspec = spec_for_tag(model.spec_tag)
+    # LeNet's extractor reads the LeNet5Config; the seq extractors read
+    # the point itself (ArchLaunchPoint exposes the intrinsic surface).
+    feature_rows = [aspec.features(p.cfg if aspec.family == "lenet" else p)
+                    for p, _ in points]
     comms: List[CommEstimate] = []
     for point, feas in points:
-        cfg = point.cfg
         comms.append(estimate_comm(
-            cfg.strategy, cfg.n_devices,
-            feas.memory.params_full_bytes, wire_bits=cfg.wire_bits,
-            act_bytes=lenet_act_bytes(cfg),
+            point.strategy, point.n_devices,
+            feas.memory.params_full_bytes, wire_bits=point.wire_bits,
+            act_bytes=point.act_bytes(),
             calibration=model.calibration, detail=True))
     comm_step = np.array([c.seconds * 1e3 for c in comms])
     comp_step, total_step = _predict_step_ms(model, feature_rows, comm_step)
+    scales = 1.0 / _ref_work_scale(model.spec_tag, feature_rows)
+    ref_units = REF_TOKENS if aspec.norm_unit == "token" else REF_SAMPLES
 
     band = max(model.band_mape, model.compute_mape, 1e-6)
     out: List[Prediction] = []
     for i, (point, feas) in enumerate(points):
-        cfg = point.cfg
-        scale = REF_SAMPLES / cfg.batch_size
+        scale = float(scales[i])
         step_ms = max(float(total_step[i]), 1e-9)
         time_ms = step_ms * scale
-        throughput = REF_SAMPLES / (time_ms * 1e-3)
+        throughput = ref_units / (time_ms * 1e-3)
         out.append(Prediction(
             point=point, feasibility=feas,
             compute_ms=float(comp_step[i]) * scale,
@@ -372,8 +396,8 @@ def predict_points(model: PlannerModel,
             hi_ms=time_ms * (1.0 + band),
             step_ms=step_ms,
             throughput_sps=throughput,
-            efficiency_sps_per_device=throughput / cfg.n_devices,
-            device_seconds=time_ms * 1e-3 * cfg.n_devices,
+            efficiency_sps_per_device=throughput / point.n_devices,
+            device_seconds=time_ms * 1e-3 * point.n_devices,
             mem_headroom_bytes=feas.mem_headroom_bytes,
             dominant_term=_dominant_term(float(comp_step[i]), comms[i],
                                          1.0),

@@ -214,6 +214,15 @@ class LaunchPoint:
     def compression(self) -> str:
         return self.cfg.compression
 
+    @property
+    def wire_bits(self) -> int:
+        return self.cfg.wire_bits
+
+    def act_bytes(self) -> int:
+        """Activation bytes the tp-family schedules price collectives on."""
+        from repro.perf.sweep import lenet_act_bytes
+        return lenet_act_bytes(self.cfg)
+
     def key(self) -> Tuple:
         return (self.strategy, self.n_devices, self.batch_size,
                 self.compression)
@@ -338,5 +347,204 @@ def enumerate_lenet_space(
                     point = LaunchPoint(
                         cfg=cfg,
                         mesh_axes=mesh_axes_for(strategy, int(n)))
+                    (feasible if feas.ok else skipped).append((point, feas))
+    return feasible, skipped
+
+
+# ---------------------------------------------------------------------------
+# Generic (any registry architecture) launch points
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ArchLaunchPoint:
+    """One candidate launch configuration of an LM/MoE/SSM model —
+    the same point API as ``LaunchPoint`` (strategy/n_devices/batch_size/
+    compression/act_bytes/key), so predict/search/report layers consume
+    both without dispatch."""
+    cfg: object                    # repro.configs.base.ModelConfig
+    seq_len: int
+    n_devices: int
+    batch_size: int
+    strategy: str
+    compression: str
+    mesh_axes: Mapping[str, int] = field(hash=False, default=None)
+
+    @property
+    def wire_bits(self) -> int:
+        from repro.dist.compression import WIRE_BITS
+        return WIRE_BITS[self.compression]
+
+    def act_bytes(self) -> int:
+        return 4 * self.batch_size * self.seq_len * \
+            self.cfg.d_model * self.cfg.n_layers
+
+    def key(self) -> Tuple:
+        return (self.strategy, self.n_devices, self.batch_size,
+                self.compression)
+
+    # -- the attribute surface the registry's seq feature extractors
+    # read (repro.perf.features._seq_features maps a FeatureSpec's
+    # numeric intrinsics straight off the point) ----------------------
+    @property
+    def family(self) -> str:
+        return {"dense": "lm"}.get(self.cfg.family, self.cfg.family)
+
+    @property
+    def arch_id(self) -> str:
+        return getattr(self.cfg, "name", "")
+
+    @property
+    def d_model(self) -> int:
+        return self.cfg.d_model
+
+    @property
+    def n_layers(self) -> int:
+        return self.cfg.n_layers
+
+    @property
+    def d_ff(self) -> int:
+        return self.cfg.d_ff
+
+    @property
+    def n_experts(self) -> int:
+        return self.cfg.moe.n_experts if self.cfg.moe else 0
+
+    @property
+    def top_k(self) -> int:
+        return self.cfg.moe.top_k if self.cfg.moe else 0
+
+    @property
+    def d_state(self) -> int:
+        return self.cfg.ssm.d_state if self.cfg.ssm else 0
+
+
+def model_memory(cfg, strategy: Union[str, object], n_devices: int, *,
+                 batch_size: int, seq_len: int, optimizer: str = "sgd",
+                 skeleton=None) -> MemoryEstimate:
+    """Per-device memory of one LM/MoE/SSM launch point under the
+    registry's own PartitionSpec resolution (``param_pspecs`` via
+    ``tree_shard_bytes`` — the parity tests pin this leaf-for-leaf).
+    Activations are the tp block-boundary tensors of the per-device
+    sub-batch (matching ``model_comm_sizes``)."""
+    import jax
+
+    from repro.models import model as MD
+    from repro.perf.sweep import arch_mesh_axes
+
+    axes = arch_mesh_axes(resolve_strategy(strategy).name, n_devices)
+    if skeleton is None:
+        skeleton = jax.eval_shape(
+            lambda: MD.init_model(jax.random.PRNGKey(0), cfg))
+    per_dev_batch = max(batch_size // max(axes.get("data", 1), 1), 1)
+    act = 4 * per_dev_batch * seq_len * cfg.d_model * cfg.n_layers
+    return estimate_memory(
+        skeleton, axes, strategy,
+        opt_copies=LM_OPT_STATE_COPIES.get(optimizer, 2.0),
+        act_per_device_bytes=act)
+
+
+def estimate_memory_for(cfg, strategy: Union[str, object], n_devices: int,
+                        *, batch_size: int, seq_len: int = 0,
+                        optimizer: str = "sgd",
+                        skeleton=None) -> MemoryEstimate:
+    """Generic per-device memory estimate dispatching on architecture:
+    LeNet configs go through the measured-sweep pricing
+    (``lenet_memory`` — positional pspecs, conv/dense working set), any
+    registry ModelConfig through ``model_memory`` (logical-rule pspecs).
+    The LeNet path ignores ``seq_len``/``optimizer``/``strategy``
+    overrides — its config carries them."""
+    if isinstance(cfg, LeNet5Config):
+        import dataclasses
+        cfg = dataclasses.replace(cfg,
+                                  strategy=resolve_strategy(strategy).name,
+                                  n_devices=int(n_devices),
+                                  batch_size=int(batch_size))
+        return lenet_memory(cfg, skeleton=skeleton)
+    return model_memory(cfg, strategy, n_devices, batch_size=batch_size,
+                        seq_len=seq_len, optimizer=optimizer,
+                        skeleton=skeleton)
+
+
+def check_feasible_model(cfg, strategy: str, n_devices: int, *,
+                         batch_size: int, seq_len: int, pool: int,
+                         optimizer: str = "sgd",
+                         mem_budget_bytes: int = DEFAULT_MEM_BUDGET_BYTES,
+                         skeleton=None) -> Feasibility:
+    """``check_feasible`` for LM/MoE/SSM points: pool fit, global batch
+    divisible over the strategy's data axis, memory within budget."""
+    from repro.perf.sweep import arch_mesh_axes
+
+    axes = arch_mesh_axes(resolve_strategy(strategy).name, n_devices)
+    reasons: List[str] = []
+    if n_devices > pool:
+        reasons.append(SKIP_POOL)
+    data = axes.get("data", 1)
+    if data > 1 and batch_size % data != 0:
+        reasons.append(SKIP_BATCH)
+    mem = model_memory(cfg, strategy, n_devices, batch_size=batch_size,
+                       seq_len=seq_len, optimizer=optimizer,
+                       skeleton=skeleton)
+    headroom = mem.headroom_bytes(mem_budget_bytes)
+    if headroom < 0:
+        reasons.append(SKIP_MEMORY)
+    return Feasibility(ok=not reasons, reasons=tuple(reasons),
+                       memory=mem, mem_headroom_bytes=headroom)
+
+
+def enumerate_space(
+        base, *, pool: int, seq_len: int = 0,
+        n_devices: Sequence[int] = POOL_DEVICES,
+        batches: Sequence[int] = None,
+        strategies: Sequence[str] = tuple(sorted(STRATEGIES)),
+        compressions: Sequence[str] = None,
+        optimizer: str = "sgd",
+        mem_budget_bytes: int = DEFAULT_MEM_BUDGET_BYTES,
+) -> Tuple[List[Tuple[object, Feasibility]],
+           List[Tuple[object, Feasibility]]]:
+    """Generic (feasible, skipped) launch-point enumeration.
+
+    LeNet configs delegate to ``enumerate_lenet_space`` unchanged; any
+    registry ModelConfig walks the same extrinsic grid with the LM wire
+    formats and yields ``ArchLaunchPoint``s priced by ``model_memory``.
+    Intrinsics stay pinned to ``base`` either way."""
+    if isinstance(base, LeNet5Config):
+        return enumerate_lenet_space(
+            base, pool=pool, n_devices=n_devices,
+            batches=BATCH_SIZES if batches is None else batches,
+            strategies=strategies,
+            compressions=(GRAD_COMPRESSIONS if compressions is None
+                          else compressions),
+            mem_budget_bytes=mem_budget_bytes)
+    import jax
+
+    from repro.models import model as MD
+    from repro.perf.sweep import (ARCH_BATCH_SIZES, ARCH_COMPRESSIONS,
+                                  arch_mesh_axes)
+
+    if not seq_len:
+        raise ValueError("enumerate_space needs seq_len > 0 for "
+                         "sequence-model configs")
+    batches = ARCH_BATCH_SIZES if batches is None else batches
+    compressions = (ARCH_COMPRESSIONS if compressions is None
+                    else compressions)
+    skeleton = jax.eval_shape(
+        lambda: MD.init_model(jax.random.PRNGKey(0), base))
+    feasible, skipped = [], []
+    for strategy in strategies:
+        resolve_strategy(strategy)          # fail fast on a typo
+        for n in n_devices:
+            for batch in batches:
+                for comp in compressions:
+                    feas = check_feasible_model(
+                        base, strategy, int(n), batch_size=int(batch),
+                        seq_len=int(seq_len), pool=pool,
+                        optimizer=optimizer,
+                        mem_budget_bytes=mem_budget_bytes,
+                        skeleton=skeleton)
+                    point = ArchLaunchPoint(
+                        cfg=base, seq_len=int(seq_len), n_devices=int(n),
+                        batch_size=int(batch), strategy=strategy,
+                        compression=comp,
+                        mesh_axes=arch_mesh_axes(strategy, int(n)))
                     (feasible if feas.ok else skipped).append((point, feas))
     return feasible, skipped

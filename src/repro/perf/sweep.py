@@ -50,7 +50,7 @@ from repro.dist.sharding import gather_to_full, shard_of_full
 from repro.models.lenet import feature_dims, init_lenet, lenet_loss
 from repro.perf.costmodel import (Calibration, load_calibration,
                                   mesh_axes_for)
-from repro.perf.features import lenet_features
+from repro.perf.features import get_spec, lenet_features
 
 MODES = ("jit", "jit_donate", "eager")
 
@@ -158,6 +158,13 @@ class SweepRow:
     # activation footprint the tp-family schedules were billed for.
     calibration: str = "default"
     act_bytes: int = 0
+    # cross-architecture rows (``run_arch_sweep``): which family produced
+    # the row and the fixed-work unit its fit target normalizes by —
+    # "sample" (LeNet, REF_SAMPLES) or "token" (LM/MoE/SSM, REF_TOKENS;
+    # an iteration over twice the sequence does twice the work, which a
+    # per-sample unit would misread as the model getting slower).
+    family: str = "lenet"
+    norm_unit: str = "sample"
 
 
 def _strategy_pspecs(params, strategy: str, axes_sizes: Dict[str, int]):
@@ -366,12 +373,20 @@ def run_sweep(n_trials: int = 300, modes: Sequence[str] = MODES,
     return rows
 
 
-REF_SAMPLES = 128     # fixed work unit for the fit target
+REF_SAMPLES = 128     # fixed work unit for sample-normalized rows (LeNet)
+REF_TOKENS = 4096     # fixed work unit for token-normalized rows (seq models)
 
 
 def fit_target_ms(row: Dict, source: str = "simulated") -> float:
-    """Fit target: time to process REF_SAMPLES samples at the sampled
-    (batch, n_devices) — i.e. iteration time × (REF_SAMPLES / batch).
+    """Fit target: time to process a fixed unit of work at the sampled
+    (batch, n_devices) — iteration time × (REF_SAMPLES / batch) for
+    sample-normalized rows, × (REF_TOKENS / (batch × seq_len)) for
+    token-normalized rows (``row["norm_unit"]``; absent = "sample", so
+    pre-existing LeNet artifacts keep their original targets). A
+    per-sample unit is *wrong* for token-based sequence models: two rows
+    differing only in seq_len do different amounts of work per sample,
+    and normalizing by batch alone would fold that work into the
+    intrinsic powers as a spurious slowdown.
 
     Rationale (DESIGN.md §5): the paper's Table-6 finding is q_batch ≈
     q_gpus ≈ −1, i.e. *per-iteration* time inversely proportional to both.
@@ -400,6 +415,8 @@ def fit_target_ms(row: Dict, source: str = "simulated") -> float:
         t = row["measured_ms"]
     else:
         raise ValueError(f"unknown fit-target source {source!r}")
+    if row.get("norm_unit", "sample") == "token":
+        return t * REF_TOKENS / (b * row["features"]["seq_len"])
     return t * REF_SAMPLES / b
 
 
@@ -415,3 +432,240 @@ def split_rows(rows: List[Dict], mode: str, n_fit: int = 900,
     f_t = [r["features"] for r in test]
     return (f_s, [fit_target_ms(r, source) for r in fit],
             f_t, [fit_target_ms(r, source) for r in test])
+
+
+# ---------------------------------------------------------------------------
+# Cross-architecture sweep: lm / moe / ssm families
+# ---------------------------------------------------------------------------
+#
+# The same measured-vs-simulated protocol as the LeNet sweep, but the
+# subject is a family-preserving ``reduced()`` of a real architecture
+# config and the distributed iteration is the *actual* LM train step
+# (``repro.train.step.make_sharded_train_step`` — registry-rule param
+# shards, in-body all-gather, wire-compressed gradient all-reduce), not
+# the LeNet-specific shard_map body. Intrinsics per family come from the
+# ``repro.perf.features`` registry; extrinsics are shared with LeNet.
+
+ARCH_N_DEVICES = (1, 2, 4, 8)
+ARCH_BATCH_SIZES = (8, 16, 32)
+# wire formats the sharded LM step implements (``tcfg.grad_compression``):
+# int8 rides through the error-feedback collective on this path.
+ARCH_COMPRESSIONS = ("none", "bf16", "int8_ef")
+
+
+@dataclass(frozen=True)
+class ArchPoint:
+    """One sampled cross-architecture trial.
+
+    Intrinsics a family does not use stay 0 and are absent from that
+    family's FeatureSpec (the encoder never sees them — it would reject
+    non-positive numerics)."""
+    family: str
+    arch_id: str
+    seq_len: int
+    d_model: int
+    n_layers: int
+    d_ff: int = 0
+    n_experts: int = 0
+    top_k: int = 0
+    d_state: int = 0
+    n_devices: int = 1
+    batch_size: int = 8
+    strategy: str = "dp"
+    compression: str = "none"
+
+    @property
+    def wire_bits(self) -> int:
+        return WIRE_BITS[self.compression]
+
+    def model_config(self):
+        """The family-preserving ``reduced()`` ModelConfig this point
+        trains; intrinsics the reducer pins (MoE top_k, SSD state dim)
+        are re-opened so the sweep actually varies them."""
+        import dataclasses
+
+        from repro.configs import get_config
+        from repro.configs.base import reduced
+
+        cfg = reduced(get_config(self.arch_id), n_layers=self.n_layers,
+                      d_model=self.d_model, vocab=256,
+                      d_ff=self.d_ff or 128,
+                      n_experts=self.n_experts or 4,
+                      seq_cap=self.seq_len)
+        if self.top_k and cfg.moe is not None:
+            cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+                cfg.moe, top_k=min(self.top_k, cfg.moe.n_experts)))
+        if self.d_state and cfg.ssm is not None:
+            cfg = dataclasses.replace(cfg, ssm=dataclasses.replace(
+                cfg.ssm, d_state=self.d_state))
+        return cfg
+
+    def features(self) -> Dict:
+        return get_spec(self.family).features(self)
+
+
+def sample_arch_point(family: str, rng: np.random.Generator) -> ArchPoint:
+    """Random point of ``family``'s intrinsic space × the shared
+    extrinsic grid (the arch-sweep analogue of ``sample_config``)."""
+    aspec = get_spec(family)
+    intr = {k: int(rng.choice(v)) for k, v in aspec.intrinsic_space.items()}
+    return ArchPoint(family=family, arch_id=aspec.arch_id,
+                     n_devices=int(rng.choice(ARCH_N_DEVICES)),
+                     batch_size=int(rng.choice(ARCH_BATCH_SIZES)),
+                     strategy=str(rng.choice(DIST_STRATEGIES)),
+                     compression=str(rng.choice(ARCH_COMPRESSIONS)),
+                     **intr)
+
+
+def arch_mesh_axes(strategy: str, n_devices: int) -> Dict[str, int]:
+    """``mesh_axes_for`` plus a size-1 "data" axis when the strategy has
+    none: the LM sharded train step all-reduces gradients over the batch
+    axes and refuses a mesh without one, so tp meshes replicate the batch
+    over a degenerate data axis (exactly what the LeNet measured path
+    does implicitly by replicating the batch over "model")."""
+    axes = dict(mesh_axes_for(strategy, n_devices))
+    if "data" not in axes:
+        axes = {"data": 1, **axes}
+    return axes
+
+
+def measure_sharded_arch_trial(point: ArchPoint, cfg, tcfg, mode: str, *,
+                               n_iters: int = 2, seed: int = 0
+                               ) -> Tuple[Optional[float], Optional[str]]:
+    """(median wall-clock seconds of the real sharded LM train step over
+    ``point.n_devices`` pool devices, skip sentinel)."""
+    devs = jax.devices()
+    if len(devs) < point.n_devices:
+        return None, SKIP_POOL
+    from repro.data.synthetic import make_batch_for
+    from repro.launch.specs import batch_shardings
+    from repro.train.step import (init_sharded_train_state,
+                                  make_sharded_train_step,
+                                  sharded_state_specs,
+                                  sharded_state_shardings)
+
+    axes = arch_mesh_axes(point.strategy, point.n_devices)
+    mesh = Mesh(np.asarray(devs[:point.n_devices]).reshape(
+        tuple(axes.values())), tuple(axes))
+    specs = sharded_state_specs(cfg, tcfg, mesh, point.strategy)
+    shardings = sharded_state_shardings(cfg, tcfg, mesh, point.strategy,
+                                        specs)
+    step_raw = make_sharded_train_step(cfg, tcfg, mesh, point.strategy,
+                                       state_specs=specs)
+    key = jax.random.PRNGKey(seed)
+    state = init_sharded_train_state(key, cfg, tcfg, mesh)
+    batch = make_batch_for(cfg, point.batch_size, point.seq_len, seed=seed)
+    b_shard = batch_shardings(batch, mesh)
+    donate = (0,) if mode == "jit_donate" else ()
+    step = jax.jit(step_raw, in_shardings=(shardings, b_shard),
+                   out_shardings=(shardings, None), donate_argnums=donate)
+    state = jax.device_put(state, shardings)
+    b = jax.device_put(batch, b_shard)
+
+    state, _ = step(state, b)                     # warm-up / compile
+    jax.block_until_ready(state)
+    times = []
+    for _ in range(n_iters):
+        t0 = time.perf_counter()
+        state, m = step(state, b)
+        jax.block_until_ready(m["loss"])
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times)), None
+
+
+def measure_arch_trial(point: ArchPoint, mode: str = "jit", *,
+                       n_iters: int = 2, seed: int = 0,
+                       sharded: bool = True,
+                       calibration: Optional[Calibration] = None
+                       ) -> SweepRow:
+    """The cross-architecture counterpart of ``measure_trial``: same row
+    schema, token norm unit, the LM train step as the subject."""
+    from repro.configs.base import TrainConfig
+    from repro.data.synthetic import make_batch_for
+    from repro.perf.planner.space import model_comm_sizes
+    from repro.perf.predict import estimate_comm
+    from repro.train.step import init_train_state, make_train_step
+
+    cal = calibration if calibration is not None else load_calibration()
+    cfg = point.model_config()
+    # Single-device compute on the per-device sub-batch (the batch shards
+    # over the strategy's data axis only; tp replicates it) — compression
+    # off here, it is wire format, not compute.
+    tc_comp = TrainConfig(optimizer="sgd", grad_compression="none",
+                          remat_policy="none")
+    data_shards = arch_mesh_axes(point.strategy, point.n_devices)["data"]
+    per_dev = max(point.batch_size // data_shards, 1)
+    key = jax.random.PRNGKey(seed)
+    state = init_train_state(key, cfg, tc_comp)
+    batch = make_batch_for(cfg, per_dev, point.seq_len, seed=seed)
+    step = make_train_step(cfg, tc_comp)
+    if mode != "eager":
+        step = jax.jit(step,
+                       donate_argnums=(0,) if mode == "jit_donate" else ())
+    state, _ = step(state, batch)                 # warm-up / compile
+    jax.block_until_ready(state)
+    times = []
+    for _ in range(n_iters):
+        t0 = time.perf_counter()
+        state, m = step(state, batch)
+        jax.block_until_ready(m["loss"])
+        times.append(time.perf_counter() - t0)
+    measured = float(np.median(times))
+
+    pb, ab = model_comm_sizes(cfg, point.batch_size, point.seq_len)
+    comm = estimate_comm(point.strategy, point.n_devices, pb,
+                         wire_bits=point.wire_bits, act_bytes=ab,
+                         calibration=cal).seconds
+    t_sim = measured * 1e3 + comm * 1e3
+    t_meas, skip = None, SKIP_NOT_REQUESTED
+    if sharded:
+        if mode == "eager":
+            skip = SKIP_EAGER
+        else:
+            tcfg = TrainConfig(optimizer="sgd",
+                               grad_compression=point.compression,
+                               remat_policy="none")
+            t_meas, skip = measure_sharded_arch_trial(
+                point, cfg, tcfg, mode, n_iters=n_iters, seed=seed)
+            if t_meas is not None:
+                t_meas *= 1e3
+    return SweepRow(features=point.features(), mode=mode,
+                    measured_ms=measured * 1e3, comm_ms=comm * 1e3,
+                    time_ms=t_sim, param_bytes=pb,
+                    t_simulated=t_sim, t_measured_sharded=t_meas,
+                    sharded_skip=skip, calibration=cal.label,
+                    act_bytes=ab, family=point.family,
+                    norm_unit=get_spec(point.family).norm_unit)
+
+
+def run_arch_sweep(family: str, n_trials: int = 48, mode: str = "jit",
+                   seed: int = 0, out_path: Optional[str] = None,
+                   verbose_every: int = 5, sharded: bool = True,
+                   calibration: Optional[Calibration] = None,
+                   n_iters: int = 2) -> List[Dict]:
+    """Random sweep of one architecture family (the arch-sweep analogue
+    of ``run_sweep``; jit-only by default — the framework axis is the
+    LeNet sweep's subject, not this one's)."""
+    cal = calibration if calibration is not None else load_calibration()
+    rng = np.random.default_rng(seed)
+    rows: List[Dict] = []
+    t0 = time.time()
+    for i in range(n_trials):
+        point = sample_arch_point(family, rng)
+        try:
+            row = measure_arch_trial(point, mode, n_iters=n_iters,
+                                     seed=seed + i, sharded=sharded,
+                                     calibration=cal)
+        except Exception as e:      # a pathological point; record & skip
+            rows.append({"error": str(e), "mode": mode, "family": family,
+                         "features": point.features()})
+            continue
+        rows.append(asdict(row))
+        if verbose_every and (i + 1) % verbose_every == 0:
+            print(f"  [{family}] sweep {i+1}/{n_trials} "
+                  f"({time.time()-t0:.0f}s)", flush=True)
+            if out_path:                       # incremental checkpoint
+                json.dump(rows, open(out_path, "w"))
+    if out_path:
+        json.dump(rows, open(out_path, "w"))
+    return rows

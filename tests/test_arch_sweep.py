@@ -1,0 +1,259 @@
+"""Cross-architecture plumbing (repro.perf.features registry + arch sweep).
+
+Five contracts:
+
+* **registry** — per-family ArchSpec resolution, spec-tag lookup, and
+  the deprecated LeNet aliases resolving through the registry (not a
+  parallel copy of it);
+* **per-family round-trip** — each family's ``reduced()`` config runs a
+  real forward/loss, and its ArchPoint features encode through the
+  family's own FeatureSpec without loss;
+* **feasibility parity** — the generic planner memory path prices LM
+  configs with ``dist.sharding.param_pspecs`` leaf-for-leaf on
+  1/2/4/8-device meshes (never a re-implementation of the rules);
+* **fit convergence** — every family's DE fit converges on a tiny
+  synthetic sweep drawn from its own feature space;
+* **norm units** — token-normalized rows get batch×seq fixed-work
+  targets, sample rows (and legacy rows without the column) keep the
+  REF_SAMPLES arithmetic, and planner artifacts round-trip their spec
+  tag.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.generic_model import encode_dataset
+from repro.perf.features import (DIST_STRATEGIES, SHARED_EXTRINSICS,
+                                 families, get_spec, spec_for_tag)
+from repro.perf.sweep import (ARCH_COMPRESSIONS, REF_SAMPLES, REF_TOKENS,
+                              ArchPoint, fit_target_ms, sample_arch_point)
+
+SEQ_FAMILIES = ("lm", "moe", "ssm")
+
+
+# ---------------------------------------------------------------------------
+# Registry + deprecated aliases
+# ---------------------------------------------------------------------------
+
+def test_registry_families_and_tags():
+    assert set(SEQ_FAMILIES) | {"lenet"} <= set(families())
+    for family in families():
+        aspec = get_spec(family)
+        assert aspec.family == family
+        assert spec_for_tag(aspec.spec_tag) is aspec
+        assert tuple(aspec.spec.extrinsic) == SHARED_EXTRINSICS
+        assert aspec.norm_unit == ("sample" if family == "lenet"
+                                   else "token")
+        # every numeric intrinsic has a sampled value set
+        assert set(aspec.spec.numeric) <= set(aspec.intrinsic_space)
+    with pytest.raises(KeyError):
+        get_spec("gan")
+    with pytest.raises(KeyError):
+        spec_for_tag("arch:unknown-v0")
+
+
+def test_strategies_pin_matches_sharding_registry():
+    from repro.dist.sharding import STRATEGIES
+    assert set(DIST_STRATEGIES) == set(STRATEGIES)
+
+
+def test_deprecated_aliases_resolve_through_registry():
+    # `from repro.perf.features import LENET_SPEC` must keep working and
+    # be the registry's own object, not a parallel definition
+    from repro.perf.features import LENET_SPEC, lenet_features
+    assert LENET_SPEC is get_spec("lenet").spec
+    assert lenet_features is get_spec("lenet").features
+    with pytest.raises(AttributeError):
+        from repro.perf import features
+        features.NOT_A_SPEC
+
+
+# ---------------------------------------------------------------------------
+# Per-family forward + features round-trip
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", SEQ_FAMILIES)
+def test_family_reduced_forward_and_features_roundtrip(family):
+    import jax
+
+    from repro.data.synthetic import make_batch_for
+    from repro.models import model as MD
+
+    rng = np.random.default_rng(3)
+    point = dataclasses.replace(sample_arch_point(family, rng),
+                                seq_len=16, batch_size=2)
+    cfg = point.model_config()
+    # the point's intrinsics actually landed in the config
+    assert cfg.n_layers == point.n_layers
+    assert cfg.d_model == point.d_model
+    if family == "moe":
+        assert cfg.moe.n_experts == point.n_experts
+        assert cfg.moe.top_k == point.top_k
+    if family == "ssm":
+        assert cfg.ssm.d_state == point.d_state
+    # real tiny forward/loss
+    params = MD.init_model(jax.random.PRNGKey(0), cfg)
+    batch = make_batch_for(cfg, 2, 16)
+    (loss, _), _ = jax.value_and_grad(
+        lambda p: MD.loss_fn(p, cfg, batch), has_aux=True)(params)
+    assert np.isfinite(float(loss))
+    # features encode through the family's own spec without loss
+    aspec = get_spec(family)
+    feats = point.features()
+    assert feats["strategy"] == point.strategy
+    assert feats["wire_bits"] == point.wire_bits
+    Xnum, Xcat, Xext, t = encode_dataset(aspec.spec, [feats], [1.0])
+    assert Xnum.shape == (1, len(aspec.spec.numeric))
+    assert list(np.asarray(Xnum[0])) == \
+        [float(feats[k]) for k in aspec.spec.numeric]
+    assert Xext.shape == (1, len(SHARED_EXTRINSICS))
+
+
+def test_sampled_points_stay_in_family_space():
+    rng = np.random.default_rng(11)
+    for family in SEQ_FAMILIES:
+        aspec = get_spec(family)
+        for _ in range(10):
+            p = sample_arch_point(family, rng)
+            for k, vals in aspec.intrinsic_space.items():
+                assert getattr(p, k) in vals
+            assert p.strategy in DIST_STRATEGIES
+            assert p.compression in ARCH_COMPRESSIONS
+
+
+# ---------------------------------------------------------------------------
+# Feasibility parity: generic memory path == param_pspecs, leaf for leaf
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def lm_cfg():
+    from repro.configs import get_config, reduced
+    return reduced(get_config("smollm-360m"))
+
+
+@pytest.mark.parametrize("strategy", sorted(DIST_STRATEGIES))
+@pytest.mark.parametrize("n", (1, 2, 4, 8))
+def test_estimate_memory_for_matches_param_pspecs(strategy, n, lm_cfg):
+    """The generic entry point's per-device bytes must equal a direct
+    leaf-for-leaf division by the registry's own PartitionSpecs."""
+    import jax
+
+    from repro.dist.sharding import param_pspecs
+    from repro.models import model as MD
+    from repro.models.layers import is_param
+    from repro.perf.planner import estimate_memory_for
+    from repro.perf.sweep import arch_mesh_axes
+
+    mem = estimate_memory_for(lm_cfg, strategy, n, batch_size=16,
+                              seq_len=32, optimizer="sgd")
+    axes = arch_mesh_axes(strategy, n)
+    skeleton = jax.eval_shape(
+        lambda: MD.init_model(jax.random.PRNGKey(0), lm_cfg))
+    pspecs = param_pspecs(skeleton, axes, strategy)
+    exp_full, exp_shard = [0], [0]
+
+    def one(p, spec):
+        b = int(np.prod(p.value.shape)) * p.value.dtype.itemsize
+        div = 1
+        for entry in tuple(spec):
+            if entry is None:
+                continue
+            for a in (entry if isinstance(entry, tuple) else (entry,)):
+                div *= axes.get(a, 1)
+        exp_full[0] += b
+        exp_shard[0] += b // div
+
+    jax.tree.map(one, skeleton, pspecs, is_leaf=is_param)
+    assert mem.params_full_bytes == exp_full[0]
+    assert mem.params_per_device_bytes == exp_shard[0]
+    # activation term: tp block boundaries of the per-device sub-batch
+    per_dev = max(16 // axes.get("data", 1), 1)
+    assert mem.act_per_device_bytes == \
+        4 * per_dev * 32 * lm_cfg.d_model * lm_cfg.n_layers
+
+
+def test_enumerate_space_dispatches_on_architecture(lm_cfg):
+    from repro.configs.lenet5 import LeNet5Config
+    from repro.perf.planner import ArchLaunchPoint, LaunchPoint, \
+        enumerate_space
+
+    feas, _ = enumerate_space(LeNet5Config(), pool=8, batches=(16,),
+                              compressions=("none",))
+    assert feas and all(isinstance(p, LaunchPoint) for p, _ in feas)
+
+    feas2, skipped2 = enumerate_space(lm_cfg, pool=4, seq_len=32,
+                                      batches=(16,),
+                                      compressions=("none",))
+    assert feas2 and all(isinstance(p, ArchLaunchPoint) for p, _ in feas2)
+    # pool=4 must skip the 8-device points
+    assert any(f.reasons == ("pool-too-small",) for _, f in skipped2)
+    # the point exposes the seq feature surface the registry extractors read
+    p0 = feas2[0][0]
+    assert p0.family == "lm" and p0.d_model == lm_cfg.d_model
+    feats = get_spec("lm").features(p0)
+    assert feats["seq_len"] == 32
+    with pytest.raises(ValueError, match="seq_len"):
+        enumerate_space(lm_cfg, pool=4)
+
+
+# ---------------------------------------------------------------------------
+# Fit convergence per family (tiny synthetic sweep)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", SEQ_FAMILIES)
+def test_family_fit_converges_on_synthetic_sweep(family):
+    """DE through each family's own spec recovers a constant-time synthetic
+    sweep (the degenerate case every correct encoding must nail)."""
+    from repro.core.fit import fit_model
+
+    rng = np.random.default_rng(5)
+    aspec = get_spec(family)
+    samples = [sample_arch_point(family, rng).features() for _ in range(24)]
+    times = [50.0] * len(samples)
+    r = fit_model(aspec.spec, samples[:16], times[:16],
+                  test_samples=samples[16:], test_times=times[16:],
+                  seeds=(0, 1), maxiter=150)
+    assert np.isfinite(r.test_metrics["mape"])
+    assert r.test_metrics["mape"] < 0.25, r.test_metrics
+
+
+# ---------------------------------------------------------------------------
+# Norm units + planner artifact spec tags
+# ---------------------------------------------------------------------------
+
+def test_fit_target_norm_units():
+    base = {"mode": "jit", "measured_ms": 10.0, "comm_ms": 2.0}
+    sample_row = {**base, "norm_unit": "sample",
+                  "features": {"batch_size": 32}}
+    token_row = {**base, "norm_unit": "token",
+                 "features": {"batch_size": 32, "seq_len": 64}}
+    legacy_row = {**base, "features": {"batch_size": 32}}   # pre-column rows
+    assert fit_target_ms(sample_row) == \
+        pytest.approx(12.0 * REF_SAMPLES / 32)
+    assert fit_target_ms(legacy_row) == fit_target_ms(sample_row)
+    assert fit_target_ms(token_row) == \
+        pytest.approx(12.0 * REF_TOKENS / (32 * 64))
+
+
+def test_planner_model_spec_tag_roundtrip(tmp_path):
+    from repro.core.generic_model import PerfModel
+    from repro.perf.planner import PlannerModel
+
+    for tag in ("lenet-table1-v1", "arch:lm-v1", "arch:ssm-v1"):
+        spec = spec_for_tag(tag).spec
+        m = PlannerModel(compute=PerfModel(spec, np.zeros(spec.n_params)),
+                         compute_mape=0.1, spec_tag=tag)
+        path = str(tmp_path / f"{tag.replace(':', '_')}.json")
+        m.save(path)
+        back = PlannerModel.load(path)
+        assert back.spec_tag == tag
+        assert back.compute.spec.n_params == spec.n_params
+    # wrong-length constant vectors still refuse to load
+    m = PlannerModel(compute=PerfModel(spec_for_tag("arch:lm-v1").spec,
+                                       np.zeros(get_spec("lm").spec.n_params)),
+                     compute_mape=0.1, spec_tag="arch:moe-v1")
+    path = str(tmp_path / "mismatch.json")
+    m.save(path)
+    with pytest.raises(ValueError, match="constants"):
+        PlannerModel.load(path)

@@ -26,7 +26,8 @@ SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 REQUIRED = {"features", "mode", "measured_ms", "comm_ms", "time_ms",
             "param_bytes", "t_simulated", "t_measured_sharded",
-            "sharded_skip", "calibration", "act_bytes"}
+            "sharded_skip", "calibration", "act_bytes",
+            "family", "norm_unit"}
 
 
 @pytest.mark.parametrize("strategy", DIST_STRATEGIES)
@@ -46,6 +47,9 @@ def test_row_schema_measured_and_simulated_populated(strategy):
     assert row["time_ms"] == pytest.approx(row["t_simulated"])
     assert isinstance(row["calibration"], str) and row["calibration"]
     assert row["act_bytes"] > 0
+    # cross-architecture columns: LeNet rows are per-sample normalized
+    assert row["family"] == "lenet"
+    assert row["norm_unit"] == "sample"
     # both fit targets resolve on a fully-populated row
     assert fit_target_ms(row, "simulated") > 0
     assert fit_target_ms(row, "measured") > 0

@@ -1,0 +1,106 @@
+"""CI smoke for the cross-architecture sweep: per-family trial → fit.
+
+  PYTHONPATH=src python tools/arch_smoke.py
+
+For each registered non-LeNet family (lm / moe / ssm) this runs a
+deterministic micro-sweep on the forced 8-device pool — one real
+shard_map trial per (strategy subset × device count) — asserts the row
+schema (token norm unit, measured column populated, family recorded),
+runs a tiny DE fit through the family's own FeatureSpec, and dry-runs
+the ``benchmarks.arch_sweep`` CLI plan — so the cross-architecture
+plumbing cannot silently rot between full-sweep regenerations.
+
+Exit code 0 = every family swept, fitted, and schema-valid.
+"""
+import os
+import subprocess
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+# must run before the jax backend initializes
+from repro.launch.train import DEFAULT_POOL, _force_host_pool  # noqa: E402
+
+_force_host_pool(DEFAULT_POOL)
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+
+SMOKE_CELLS = (("dp", 2, "none"), ("fsdp", 4, "bf16"),
+               ("tp", 2, "int8_ef"), ("fsdp_tp", 4, "none"))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--maxiter", type=int, default=60)
+    args = ap.parse_args(argv)
+
+    import dataclasses
+
+    import numpy as np
+
+    from repro.core.fit import fit_sweep_rows
+    from repro.perf.costmodel import DEFAULT_CALIBRATION
+    from repro.perf.features import families, get_spec
+    from repro.perf.sweep import (fit_target_ms, measure_arch_trial,
+                                  sample_arch_point)
+
+    t0 = time.time()
+    summary = {}
+    for family in families():
+        if family == "lenet":       # covered by calibration/planner smokes
+            continue
+        aspec = get_spec(family)
+        rng = np.random.default_rng(7)
+        rows = []
+        for i, (strategy, n, comp) in enumerate(SMOKE_CELLS):
+            point = dataclasses.replace(
+                sample_arch_point(family, rng), strategy=strategy,
+                n_devices=n, compression=comp, batch_size=8, seq_len=16)
+            row = dataclasses.asdict(measure_arch_trial(
+                point, "jit", n_iters=1, seed=i, sharded=True,
+                calibration=DEFAULT_CALIBRATION))
+            # row schema: the cross-architecture columns
+            assert row["family"] == family, row
+            assert row["norm_unit"] == aspec.norm_unit == "token", row
+            assert row["t_measured_sharded"] is not None, (family, row)
+            assert row["t_measured_sharded"] > 0 and row["measured_ms"] > 0
+            assert row["sharded_skip"] is None, row
+            assert set(aspec.spec.numeric) <= set(row["features"]), row
+            assert fit_target_ms(row, "measured") > 0
+            rows.append(row)
+        # tiny DE fit through the family's own spec must converge
+        # (duplicate the rows so the fit/test split is non-degenerate)
+        r, n_fit, n_test = fit_sweep_rows(
+            aspec.spec, rows * 3, "jit", "measured", seeds=(0,),
+            maxiter=args.maxiter)
+        assert np.isfinite(r.test_metrics["mape"]), r.test_metrics
+        assert n_fit > 0 and n_test > 0
+        summary[family] = {"rows": len(rows),
+                           "fit_mape": r.test_metrics["mape"]}
+        print(f"[{family}] {len(rows)} rows, fit MAPE "
+              f"{r.test_metrics['mape']:.1%} ({time.time()-t0:.0f}s)",
+              flush=True)
+
+    # the CLI plan must stay runnable
+    env = {**os.environ,
+           "PYTHONPATH": os.pathsep.join(
+               [os.path.join(os.path.dirname(os.path.dirname(
+                   os.path.abspath(__file__))), "src"),
+                os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                os.environ.get("PYTHONPATH", "")])}
+    r = subprocess.run([sys.executable, "-m", "benchmarks.arch_sweep",
+                        "--dry-run"], capture_output=True, text=True,
+                       env=env, timeout=600)
+    assert r.returncode == 0, (r.stdout[-1000:], r.stderr[-2000:])
+    assert "arch_sweep_plan" in r.stdout, r.stdout[-500:]
+
+    print(json.dumps({"ok": True, "families": summary,
+                      "wall_s": round(time.time() - t0, 1)}))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

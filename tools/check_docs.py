@@ -35,8 +35,8 @@ FENCE_RE = re.compile(r"^```(\S*)\s*(.*)$")
 
 # modules whose documented commands accept --dry-run (doctest smoke)
 DRY_RUNNABLE = ("repro.launch.train", "repro.launch.serve",
-                "benchmarks.measured_sweep", "benchmarks.plan",
-                "repro.perf.costmodel.calibrate")
+                "benchmarks.measured_sweep", "benchmarks.arch_sweep",
+                "benchmarks.plan", "repro.perf.costmodel.calibrate")
 CMD_TIMEOUT = 240
 
 

@@ -16,15 +16,19 @@ from repro.dist.compression import (COMPRESSIONS, WIRE_BITS,
                                     compressed_psum_mean,
                                     compressed_psum_mean_ef, dequantize_int8,
                                     init_error_feedback, quantize_int8)
-from repro.dist.sharding import (BATCH, STRATEGIES, Strategy, batch_pspec,
+from repro.dist.sharding import (BATCH, STRATEGIES, Strategy,
+                                 assemble_shards, batch_pspec,
                                  gather_to_full, logical_to_pspec,
                                  manual_mode, maybe_constrain, param_pspecs,
-                                 param_shardings, shard_of_full)
+                                 param_shardings, shard_coord, shard_grid,
+                                 shard_of_full, spec_from_json, spec_to_json)
 
 __all__ = [
     "BATCH", "STRATEGIES", "Strategy", "batch_pspec", "logical_to_pspec",
     "maybe_constrain", "param_pspecs", "param_shardings",
     "gather_to_full", "shard_of_full", "manual_mode",
+    "assemble_shards", "shard_coord", "shard_grid",
+    "spec_from_json", "spec_to_json",
     "COMPRESSIONS", "WIRE_BITS", "compress_decompress", "compress_tree",
     "compressed_psum_mean", "compressed_psum_mean_ef", "dequantize_int8",
     "init_error_feedback", "quantize_int8",

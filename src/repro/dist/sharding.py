@@ -409,6 +409,96 @@ def spec_entries(spec: P, ndim: int) -> Tuple:
     return entries + (None,) * (ndim - len(entries))
 
 
+# ---------------------------------------------------------------------------
+# PartitionSpec (de)serialization + shard-grid arithmetic
+# ---------------------------------------------------------------------------
+# The sharded checkpoint format (repro.train.checkpoint) records every
+# leaf's resolved PartitionSpec in the JSON sidecar so a restore can
+# reassemble full arrays from per-shard blocks written under *any*
+# (mesh, strategy) and re-place them under any other. Keeping the
+# serialization and the block arithmetic here — next to the resolver —
+# is what guarantees reshard rules and executable rules can never drift:
+# both sides go through the same ``param_pspecs`` resolution.
+
+def spec_to_json(spec: P) -> list:
+    """JSON-friendly entry list: None | "axis" | ["axis", ...]."""
+    out = []
+    for entry in tuple(spec):
+        if entry is None:
+            out.append(None)
+        elif isinstance(entry, tuple):
+            out.append(list(entry))
+        else:
+            out.append(str(entry))
+    return out
+
+
+def spec_from_json(entries) -> P:
+    """Inverse of ``spec_to_json``."""
+    return P(*[tuple(e) if isinstance(e, list) else e for e in entries])
+
+
+def shard_grid(spec: P, shape: Sequence[int],
+               mesh: MeshLike) -> Tuple[int, ...]:
+    """Blocks per dimension an array splits into under ``spec`` on
+    ``mesh``. Dims whose assigned mesh-axes product does not divide the
+    dim size count as unsharded (grid 1) — mirroring the resolver's
+    divisibility skipping, so a spec resolved by ``param_pspecs`` never
+    hits the guard."""
+    sizes = axis_sizes(mesh)
+    grid = []
+    for dim, entry in zip(shape, spec_entries(spec, len(shape))):
+        dim = int(dim)
+        if entry is None:
+            grid.append(1)
+            continue
+        prod = 1
+        for a in _axes_of(entry):
+            prod *= int(sizes.get(a, 1))
+        grid.append(prod if prod > 0 and dim % prod == 0 else 1)
+    return tuple(grid)
+
+
+def shard_coord(index: Sequence, shape: Sequence[int],
+                grid: Sequence[int]) -> Tuple[int, ...]:
+    """Grid coordinate of one device's shard from its global-index
+    slices (``jax.Array.addressable_shards[i].index``). Positional in
+    the global array, so assembly is independent of which mesh axis —
+    or axis order, for jointly-sharded dims — produced the block."""
+    coord = []
+    for sl, dim, g in zip(tuple(index) + (slice(None),) * len(grid),
+                          shape, grid):
+        start = 0 if sl.start is None else int(sl.start)
+        block = int(dim) // int(g)
+        coord.append(start // block if block else 0)
+    return tuple(coord)
+
+
+def assemble_shards(blocks: Mapping[Tuple[int, ...], "object"],
+                    shape: Sequence[int], grid: Sequence[int]):
+    """Stitch a ``{grid-coordinate: block}`` map back into the full
+    array — the host-side inverse of sharding under any spec."""
+    import numpy as np
+
+    shape = tuple(int(s) for s in shape)
+    grid = tuple(int(g) for g in grid)
+    if all(g == 1 for g in grid):
+        blk = blocks[(0,) * len(shape) if shape else ()]
+        return np.asarray(blk)
+    sample = next(iter(blocks.values()))
+    full = np.empty(shape, dtype=np.asarray(sample).dtype)
+    for coord, blk in blocks.items():
+        blk = np.asarray(blk)
+        slices = tuple(
+            slice(c * (dim // g), (c + 1) * (dim // g))
+            for c, dim, g in zip(coord, shape, grid))
+        if blk.shape != tuple(dim // g for dim, g in zip(shape, grid)):
+            raise ValueError(f"shard block {blk.shape} does not tile "
+                             f"{shape} on grid {grid}")
+        full[slices] = blk
+    return full
+
+
 def gather_to_full(x: jax.Array, spec: P) -> jax.Array:
     """Inside ``shard_map``: all-gather a local block up to the full array.
 

@@ -6,9 +6,10 @@ before the first jax call.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
+import numpy as np
 from jax.sharding import Mesh
 
 
@@ -20,10 +21,18 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
 
 
 def make_mesh(shape: Tuple[int, ...],
-              axis_names: Optional[Tuple[str, ...]] = None) -> Mesh:
-    """Arbitrary mesh over the available devices (elastic re-mesh path)."""
+              axis_names: Optional[Tuple[str, ...]] = None,
+              devices: Optional[Sequence] = None) -> Mesh:
+    """Arbitrary mesh over the available devices (elastic re-mesh path).
+
+    ``devices`` restricts the mesh to an explicit subset — the recovery
+    path builds the post-failure mesh from the *surviving* devices, so
+    the mesh can shrink without restarting the process.
+    """
     if axis_names is None:
         axis_names = ("pod", "data", "model")[-len(shape):]
+    if devices is not None:
+        return Mesh(np.asarray(devices).reshape(shape), axis_names)
     return jax.make_mesh(shape, axis_names)
 
 

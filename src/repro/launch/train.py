@@ -71,6 +71,9 @@ def build_parser() -> argparse.ArgumentParser:
                     help=f"host pool size to force on CPU (0 = auto: "
                          f"{DEFAULT_POOL})")
     ap.add_argument("--remat", default="none")
+    ap.add_argument("--dtype", default="",
+                    help="override model compute/param dtype (e.g. "
+                         "float32 for bit-parity recovery drills)")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--seed", type=int, default=0)
@@ -78,6 +81,19 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--die-at-step", type=int, default=0,
                     help="fault-injection: crash at this step (FT test)")
+    ap.add_argument("--simulate-failure", type=int, default=0,
+                    help="fault-injection: at this step, lose devices "
+                         "in-process, re-plan (strategy, mesh) on the "
+                         "survivors via ft.plan_recovery, restore the "
+                         "latest checkpoint resharded, and resume "
+                         "(requires --ckpt-dir)")
+    ap.add_argument("--fail-devices", type=int, default=0,
+                    help="devices lost at --simulate-failure "
+                         "(0 = half the pool)")
+    ap.add_argument("--recover-strategy", default="auto",
+                    choices=sorted(STRATEGIES) + ["auto"],
+                    help="strategy after the simulated failure; auto = "
+                         "planner pick on the surviving pool")
     ap.add_argument("--report-comm", action="store_true",
                     help="estimate per-step collective time from the "
                          "calibrated cost model (repro.perf.costmodel) "
@@ -144,11 +160,17 @@ def main(argv=None):
                              sharded_state_shardings)
     from repro.train.step import sharded_state_specs
     from repro.train.checkpoint import CheckpointManager
-    from repro.train.ft import StragglerDetector, plan_remesh
+    from repro.train.ft import StragglerDetector, plan_recovery, plan_remesh
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
+    if args.dtype:
+        cfg = dataclasses.replace(cfg, dtype=args.dtype,
+                                  param_dtype=args.dtype)
+    if args.simulate_failure and not args.dry_run and not args.ckpt_dir:
+        raise SystemExit("--simulate-failure requires --ckpt-dir "
+                         "(recovery restores from the latest checkpoint)")
     tcfg = TrainConfig(learning_rate=args.lr, optimizer=args.optimizer,
                        total_steps=args.steps, warmup_steps=args.steps // 10,
                        remat_policy=args.remat,
@@ -191,59 +213,163 @@ def main(argv=None):
             out["comm"] = comm
         if decision is not None:
             out["planner"] = decision.to_dict()
+        if args.simulate_failure:
+            # plan (but do not execute) the post-failure recovery, so a
+            # drill can be inspected without running it
+            lost = args.fail_devices or n_dev // 2
+            rplan = plan_recovery(
+                cfg, max(n_dev - lost, 1), batch=args.batch, seq=args.seq,
+                optimizer=args.optimizer, compression=args.compression,
+                strategy=(None if args.recover_strategy == "auto"
+                          else args.recover_strategy))
+            out["recovery"] = {"at_step": args.simulate_failure,
+                               "lost_devices": lost, **rplan.to_dict()}
         print(json.dumps(out))
         return {"dry_run": True, "path": path, "comm": comm,
+                "recovery": out.get("recovery"),
                 "planner": None if decision is None else decision.to_dict()}
 
     key = jax.random.PRNGKey(args.seed)
-    if path == "sharded":
-        state = init_sharded_train_state(key, cfg, tcfg, mesh)
-    else:
-        state = init_train_state(key, cfg, tcfg)
-    start_step = 0
-    ckpt = None
-    if args.ckpt_dir:
-        ckpt = CheckpointManager(args.ckpt_dir, keep=3)
-        latest = ckpt.latest_step()
-        if latest is not None:
-            state, start_step = ckpt.restore(state)
-            print(f"resumed from step {start_step}")
-
     example_batch = make_batch_for(cfg, args.batch, args.seq, step=0,
                                    seed=args.seed)
-    if path == "sharded":
-        # Real shard_map step: params enter sharded per the strategy's
-        # logical-rule pspecs, are all-gathered in-body, and gradients
-        # all-reduce through the compressed collective (see
-        # repro.train.step.make_sharded_train_step).
-        st_specs = sharded_state_specs(cfg, tcfg, mesh, args.strategy)
-        st_shard = sharded_state_shardings(cfg, tcfg, mesh, args.strategy,
-                                           specs=st_specs)
-        step_raw = make_sharded_train_step(
-            cfg, tcfg, mesh, args.strategy,
-            microbatches=args.microbatches, state_specs=st_specs)
-    else:
-        # GSPMD step: all distribution via sharding annotations; on one
-        # CPU device every spec degenerates to replicated and the same
-        # program runs unchanged.
-        st_shard = state_shardings(state, mesh, args.strategy)
-        step_raw = make_train_step(cfg, tcfg,
-                                   microbatches=args.microbatches)
-    b_shard = batch_shardings(example_batch, mesh)
-    # out_shardings pins the new state to the same specs, so the donated
-    # state round-trips the jit boundary without a resharding mismatch.
-    step_fn = jax.jit(step_raw,
-                      in_shardings=(st_shard, b_shard),
-                      out_shardings=(st_shard, None),
-                      donate_argnums=(0,))
-    detector = StragglerDetector(tolerance=args.straggler_tol)
 
-    losses = []
+    from repro.train.step import n_batch_shards
+
+    def build_exec(mesh, strategy, path):
+        """(skeleton, st_specs, st_shard, jitted step) for one
+        (mesh, strategy) — rebuilt from scratch on recovery so the
+        post-failure executable and the reshard target come from the
+        same ``param_pspecs`` resolution."""
+        if path == "sharded":
+            # Real shard_map step: params enter sharded per the
+            # strategy's logical-rule pspecs, are all-gathered in-body,
+            # and gradients all-reduce through the compressed collective
+            # (see repro.train.step.make_sharded_train_step).
+            skel = jax.eval_shape(
+                lambda: init_sharded_train_state(key, cfg, tcfg, mesh))
+            st_specs = sharded_state_specs(cfg, tcfg, mesh, strategy)
+            st_shard = sharded_state_shardings(cfg, tcfg, mesh, strategy,
+                                               specs=st_specs)
+            raw = make_sharded_train_step(
+                cfg, tcfg, mesh, strategy,
+                microbatches=args.microbatches, state_specs=st_specs)
+        else:
+            # GSPMD step: all distribution via sharding annotations; on
+            # one CPU device every spec degenerates to replicated and
+            # the same program runs unchanged.
+            skel = jax.eval_shape(
+                lambda: init_train_state(key, cfg, tcfg))
+            st_specs = None
+            st_shard = state_shardings(skel, mesh, strategy)
+            raw = make_train_step(cfg, tcfg,
+                                  microbatches=args.microbatches)
+        b_shard = batch_shardings(example_batch, mesh)
+        # out_shardings pins the new state to the same specs, so the
+        # donated state round-trips the jit boundary without a
+        # resharding mismatch.
+        fn = jax.jit(raw, in_shardings=(st_shard, b_shard),
+                     out_shardings=(st_shard, None), donate_argnums=(0,))
+        return skel, st_specs, st_shard, fn
+
+    def save_ckpt(at_step, state, st_specs):
+        if path == "sharded" and st_specs is not None:
+            ckpt.save_sharded(at_step, state, mesh=mesh,
+                              strategy=args.strategy, specs=st_specs,
+                              extra_meta={"arch": cfg.name})
+        else:
+            ckpt.save(at_step, state, extra_meta={"arch": cfg.name})
+
+    skel, st_specs, st_shard, step_fn = build_exec(mesh, args.strategy,
+                                                   path)
+    start_step = 0
+    ckpt = None
+    state = None
+    if args.ckpt_dir:
+        ckpt = CheckpointManager(args.ckpt_dir, keep=3)
+        if ckpt.latest_step() is not None:
+            # restore *after* the specs exist: the checkpoint may come
+            # from a different (mesh, strategy) — reshard on restore
+            state, start_step = ckpt.restore(skel, shardings=st_shard,
+                                             strict=False)
+            if ckpt.last_restore_report:
+                print(f"restore re-initialized "
+                      f"{len(ckpt.last_restore_report)} leaves: "
+                      f"{ckpt.last_restore_report[:4]}...")
+            print(f"resumed from step {start_step}")
+    if state is None:
+        if path == "sharded":
+            state = init_sharded_train_state(key, cfg, tcfg, mesh)
+        else:
+            state = init_train_state(key, cfg, tcfg)
+
+    detector = StragglerDetector(tolerance=args.straggler_tol)
+    loss_by_step = {}
+    step_times = []
+    recovery = None
     t_run = time.time()
-    for step in range(start_step, args.steps):
+    step = start_step
+    while step < args.steps:
         if args.die_at_step and step == args.die_at_step:
             print(f"fault injection: dying at step {step}", flush=True)
             os._exit(42)
+        if (args.simulate_failure and step >= args.simulate_failure
+                and recovery is None):
+            # ---- simulated device loss: re-plan, reshard, resume ----
+            t0 = time.perf_counter()
+            lost = args.fail_devices or n_dev // 2
+            survivors = jax.devices()[:max(n_dev - lost, 1)]
+            compute_ref = None
+            if step_times:
+                h = sorted(step_times)
+                compute_ref = (h[len(h) // 2], n_batch_shards(mesh))
+            rplan = plan_recovery(
+                cfg, len(survivors), batch=args.batch, seq=args.seq,
+                optimizer=args.optimizer, compression=args.compression,
+                strategy=(None if args.recover_strategy == "auto"
+                          else args.recover_strategy),
+                compute_ref=compute_ref)
+            plan_s = time.perf_counter() - t0
+            before = {"mesh": list(mesh.devices.shape),
+                      "strategy": args.strategy, "devices": n_dev}
+            n_dev = rplan.n_devices
+            mesh = make_mesh(rplan.mesh_shape, rplan.axis_names,
+                             devices=survivors[:rplan.n_devices])
+            args.strategy = rplan.strategy
+            path, path_reason = _pick_mode(args, tcfg, mesh, n_dev)
+            print(f"failure at step {step}: lost {lost} devices; "
+                  f"recovery plan: {rplan.reason}; path={path} "
+                  f"({path_reason})", flush=True)
+            t1 = time.perf_counter()
+            skel, st_specs, st_shard, step_fn = build_exec(
+                mesh, args.strategy, path)
+            try:
+                state, ckpt_step = ckpt.restore(skel, shardings=st_shard,
+                                                strict=False)
+            except FileNotFoundError:
+                raise SystemExit(
+                    f"--simulate-failure {args.simulate_failure}: no "
+                    f"checkpoint to recover from (set --ckpt-every <= "
+                    f"the failure step)")
+            restore_s = time.perf_counter() - t1
+            recovery = {
+                "at_step": step, "lost_devices": lost,
+                "before": before,
+                "after": {"mesh": list(rplan.mesh_shape),
+                          "strategy": args.strategy, "devices": n_dev},
+                "reason": rplan.reason,
+                "restored_step": ckpt_step,
+                "steps_replayed": step - ckpt_step,
+                "reinit_leaves": list(ckpt.last_restore_report),
+                "plan_s": round(plan_s, 4),
+                "restore_s": round(restore_s, 4)}
+            print(f"recovered: resumed from step {ckpt_step} on "
+                  f"mesh {rplan.mesh_shape} strategy {args.strategy} "
+                  f"(plan {plan_s*1e3:.0f}ms, restore "
+                  f"{restore_s*1e3:.0f}ms)", flush=True)
+            detector = StragglerDetector(tolerance=args.straggler_tol)
+            step_times = []
+            step = ckpt_step
+            continue
         batch = make_batch_for(cfg, args.batch, args.seq, step=step,
                                seed=args.seed)
         t0 = time.perf_counter()
@@ -251,26 +377,39 @@ def main(argv=None):
             state, metrics = step_fn(state, batch)
         jax.block_until_ready(metrics["loss"])
         dt = time.perf_counter() - t0
+        if recovery is not None and "first_step_s" not in recovery:
+            # first post-recovery step: includes the re-jit compile —
+            # the largest share of measured recovery time
+            recovery["first_step_s"] = round(dt, 4)
+            recovery["recovery_s"] = round(
+                recovery["plan_s"] + recovery["restore_s"] + dt, 4)
+        step_times.append(dt)
         flagged = detector.observe(step, dt)
-        losses.append(float(metrics["loss"]))
+        loss_by_step[step] = float(metrics["loss"])
         if step % args.log_every == 0 or flagged:
-            msg = (f"step {step:5d} loss {losses[-1]:.4f} "
+            msg = (f"step {step:5d} loss {loss_by_step[step]:.4f} "
                    f"gnorm {float(metrics['grad_norm']):.3f} "
                    f"lr {float(metrics['lr']):.2e} {dt*1e3:.0f}ms")
             if flagged:
                 msg += "  [STRAGGLER FLAGGED]"
             print(msg, flush=True)
-        if ckpt and (step + 1) % args.ckpt_every == 0:
-            ckpt.save(step + 1, state)
+        step += 1
+        if ckpt and step % args.ckpt_every == 0 and step < args.steps:
+            save_ckpt(step, state, st_specs)
     if ckpt:
-        ckpt.save(args.steps, state)
+        save_ckpt(args.steps, state, st_specs)
         ckpt.wait()
 
+    losses = [loss_by_step[s] for s in sorted(loss_by_step)]
     out = {"arch": cfg.name, "steps": args.steps,
            "first_loss": losses[0] if losses else None,
            "final_loss": float(np.mean(losses[-10:])) if losses else None,
            "wall_s": round(time.time() - t_run, 1),
+           "losses": losses,
+           "strategy": args.strategy, "mesh": list(mesh.devices.shape),
            "straggler_flags": detector.flags}
+    if recovery is not None:
+        out["recovery"] = recovery
     print(json.dumps(out))
     return out
 

@@ -86,10 +86,18 @@ def _tensor_bytes(tensor: str, inp: ScheduleInputs,
 
 
 def build_schedule(strategy: Union[str, object],
-                   inp: ScheduleInputs) -> Tuple[CollectiveCall, ...]:
-    """The concrete collective calls of one training iteration."""
+                   inp: ScheduleInputs,
+                   axes: Union[Dict[str, int], None] = None
+                   ) -> Tuple[CollectiveCall, ...]:
+    """The concrete collective calls of one training iteration.
+
+    ``axes`` overrides the canonical factoring — the elastic re-mesh
+    planner prices *candidate* (data, model) splits of a shrunken pool,
+    which need not match ``mesh_axes_for``'s convention.
+    """
     name = resolve_strategy(strategy).name
-    axes = mesh_axes_for(name, inp.n_devices)
+    if axes is None:
+        axes = mesh_axes_for(name, inp.n_devices)
     calls: List[CollectiveCall] = []
     for desc in STRATEGY_COLLECTIVES[name]:
         ring = axes.get(desc.axis, 1)
@@ -105,16 +113,18 @@ def build_schedule(strategy: Union[str, object],
 
 
 def strategy_comm_seconds(strategy: Union[str, object], inp: ScheduleInputs,
-                          links: Links = DEFAULT_LINK) -> float:
+                          links: Links = DEFAULT_LINK,
+                          axes: Union[Dict[str, int], None] = None) -> float:
     """Per-iteration communication seconds of a strategy under ``links``."""
-    return schedule_seconds(build_schedule(strategy, inp), links)
+    return schedule_seconds(build_schedule(strategy, inp, axes=axes), links)
 
 
 def describe_schedule(strategy: Union[str, object],
                       inp: ScheduleInputs,
-                      links: Links = DEFAULT_LINK) -> List[Dict]:
+                      links: Links = DEFAULT_LINK,
+                      axes: Union[Dict[str, int], None] = None) -> List[Dict]:
     """JSON-friendly breakdown (the train driver's --report-comm)."""
     return [{"op": c.op, "axis": c.axis, "tensor": c.tensor,
              "ring": c.n_devices, "bytes": round(c.nbytes),
              "ms": c.seconds(links) * 1e3}
-            for c in build_schedule(strategy, inp)]
+            for c in build_schedule(strategy, inp, axes=axes)]

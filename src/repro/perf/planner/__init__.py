@@ -20,7 +20,8 @@ how time scales" into "launch *this*":
 
 End-to-end CLI: ``python -m benchmarks.plan`` (docs/PLANNER.md).
 """
-from repro.perf.planner.auto import StrategyDecision, choose_strategy
+from repro.perf.planner.auto import (StrategyDecision, choose_strategy,
+                                     remesh_predict)
 from repro.perf.planner.predict import (PlannerModel, Prediction,
                                         UNCALIBRATED_NOTE,
                                         default_model_path,
@@ -55,7 +56,8 @@ __all__ = [
     "estimate_memory", "estimate_memory_for", "fit_planner_model",
     "kendall_tau", "lenet_memory", "execution_key", "model_comm_sizes",
     "model_memory", "objective_value", "pareto_frontier", "plan_lines",
-    "predict_points", "rank", "ranking_metrics", "render_plan",
+    "predict_points", "rank", "ranking_metrics", "remesh_predict",
+    "render_plan",
     "render_validation_md", "shard_divisor", "top_k", "tree_shard_bytes",
     "validation_slate",
 ]

@@ -131,3 +131,62 @@ def choose_strategy(cfg, *, batch: int, seq: int, n_devices: int,
         mem_headroom_bytes=best["mem_headroom_bytes"],
         calibration_label=label,
         candidates=tuple(sorted(rows, key=lambda r: r["comm_ms"])))
+
+
+def remesh_predict(cfg, strategy: str, *, batch: int, seq: int,
+                   optimizer: str = "adamw", compression: str = "none",
+                   mem_budget_bytes: int = DEFAULT_MEM_BUDGET_BYTES,
+                   calibration: Optional[Calibration] = None,
+                   compute_ref: Optional[Tuple[float, int]] = None):
+    """Build the ``predict(data, model) -> seconds`` hook that
+    ``repro.train.ft.plan_remesh`` ranks candidate mesh factorizations
+    with — the fitted performance model made pluggable into recovery.
+
+    Each candidate ``{"data": d, "model": m}`` split is priced as the
+    calibrated collective schedule of ``strategy`` on those *explicit*
+    axes (``strategy_comm_seconds(..., axes=...)``, not the canonical
+    factoring — a shrunken pool rarely matches it) plus a compute term:
+    ``compute_ref = (seconds, data_width)`` is a measured per-step time
+    at a reference data-axis width, scaled as ``seconds * ref_d / d``
+    (per-device work grows as the batch concentrates on fewer ranks).
+    Infeasible shapes — batch not divisible over ``d``, or the
+    per-device memory estimate over budget — price to ``inf`` so
+    ``plan_remesh`` can never pick them while a feasible shape exists.
+    """
+    import jax
+
+    from repro.dist.compression import WIRE_BITS
+    from repro.models import model as MD
+    from repro.perf.costmodel import load_calibration
+    from repro.perf.costmodel.schedules import (ScheduleInputs,
+                                                strategy_comm_seconds)
+
+    skeleton = jax.eval_shape(
+        lambda: MD.init_model(jax.random.PRNGKey(0), cfg))
+    param_bytes, act_bytes = model_comm_sizes(cfg, batch, seq,
+                                              skeleton=skeleton)
+    opt_copies = LM_OPT_STATE_COPIES.get(optimizer, 2.0)
+    cal = calibration if calibration is not None else load_calibration()
+    links = cal.links()
+    wire_bits = WIRE_BITS[compression]
+
+    def predict(data: int, model: int) -> float:
+        axes = {"data": int(data), "model": int(model)}
+        if batch % max(axes["data"], 1) != 0:
+            return float("inf")
+        mem = estimate_memory(skeleton, axes, strategy,
+                              opt_copies=opt_copies,
+                              act_per_device_bytes=act_bytes
+                              // max(axes["data"], 1))
+        if mem.headroom_bytes(mem_budget_bytes) < 0:
+            return float("inf")
+        inp = ScheduleInputs(n_devices=axes["data"] * axes["model"],
+                             param_bytes=param_bytes,
+                             wire_bits=wire_bits, act_bytes=act_bytes)
+        seconds = strategy_comm_seconds(strategy, inp, links, axes=axes)
+        if compute_ref is not None:
+            ref_s, ref_d = compute_ref
+            seconds += float(ref_s) * max(int(ref_d), 1) / axes["data"]
+        return seconds
+
+    return predict

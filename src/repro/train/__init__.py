@@ -1,4 +1,7 @@
 """Training/serving substrate: steps, checkpointing, fault tolerance."""
+from repro.train.checkpoint import CheckpointManager
+from repro.train.ft import (ElasticPlan, RecoveryPlan, StragglerDetector,
+                            plan_recovery, plan_remesh)
 from repro.train.step import (TrainState, init_sharded_train_state,
                               init_train_state, make_sharded_train_step,
                               make_train_step, sharded_batch_ok,
@@ -8,4 +11,6 @@ from repro.train.serve import make_decode_step, make_prefill
 __all__ = ["TrainState", "init_train_state", "make_train_step",
            "init_sharded_train_state", "make_sharded_train_step",
            "sharded_batch_ok", "sharded_state_shardings",
-           "make_prefill", "make_decode_step"]
+           "make_prefill", "make_decode_step",
+           "CheckpointManager", "ElasticPlan", "RecoveryPlan",
+           "StragglerDetector", "plan_recovery", "plan_remesh"]

@@ -1,13 +1,29 @@
-"""Fault-tolerant checkpointing: atomic, versioned, async, auto-resume.
+"""Fault-tolerant checkpointing: atomic, versioned, async, sharded.
 
-Format: one ``.npz`` per checkpoint (flattened key-path → array) plus a
-JSON sidecar with step/config metadata. Writes go to a temp file followed
-by ``os.replace`` (atomic on POSIX), so a crash mid-write can never
-corrupt the latest checkpoint. A background thread does the serialization;
-``wait()`` joins it (called before shutdown and before the next save).
+Two on-disk formats share one ``.npz`` + JSON-sidecar layout (the data
+file plus ``<data>.json`` — ``_DATA_SUFFIX``/``_META_SUFFIX`` are the
+single source of truth for the pair, used identically by save, restore
+and GC so the two can never disagree about what belongs to a step):
 
-Restore scans for the newest *complete* checkpoint (sidecar present and
-readable) — partially-written stragglers are skipped and garbage-collected.
+* **full** (``save``): flattened key-path → full array, the original
+  format. Replicated state, restorable anywhere.
+* **sharded** (``save_sharded``): gather-free — each parameter leaf is
+  written as its distinct device *blocks* (npz key
+  ``<leaf path>@@<grid coordinate>``), taken straight from
+  ``jax.Array.addressable_shards`` so no device ever materializes an
+  array it does not already hold. The sidecar records the mesh shape,
+  strategy name and every leaf's resolved PartitionSpec
+  (``repro.dist.sharding.spec_to_json``), which makes the checkpoint
+  *self-describing*: a restore can reassemble the full arrays on host
+  and re-place them under a completely different (mesh, strategy) —
+  cross-strategy resharding on restore, e.g. fsdp/8 → tp/4 after losing
+  half the pool.
+
+Writes go to a temp file followed by ``os.replace`` (atomic on POSIX),
+so a crash mid-write can never corrupt the latest checkpoint. A
+background thread does the serialization; ``wait()`` joins it. Restore
+scans newest-first and skips corrupt/partial files (falling back to the
+next-older complete checkpoint).
 """
 from __future__ import annotations
 
@@ -21,40 +37,139 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
+from repro.dist.sharding import (assemble_shards, shard_coord, shard_grid,
+                                 spec_from_json, spec_to_json)
 from repro.models.layers import Param, is_param
 
 _CKPT_RE = re.compile(r"ckpt_(\d+)\.npz$")
+
+# The suffix pair: data file and its sidecar. ``available_steps``
+# requires both; ``_gc`` removes exactly both (regression-tested:
+# keep=1 leaves exactly 2 files on disk).
+_DATA_SUFFIX = ".npz"
+_META_SUFFIX = ".npz.json"          # == _DATA_SUFFIX + ".json"
+
+# npz-key separator between a leaf's path and its shard-grid coordinate.
+_SHARD_SEP = "@@"
+
+FORMAT_FULL = "full-v1"
+FORMAT_SHARDED = "sharded-v1"
+
+
+def _upcast(arr: np.ndarray) -> np.ndarray:
+    if arr.dtype.kind == "V" or arr.dtype.name == "bfloat16":
+        # npz can't round-trip ml_dtypes; fp32 upcast is lossless
+        return arr.astype(np.float32)
+    return arr
+
+
+def _path_key(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
 
 
 def _flatten_with_paths(tree) -> Dict[str, np.ndarray]:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
-                       for p in path)
-        arr = np.asarray(leaf)
-        if arr.dtype.kind == "V" or arr.dtype.name == "bfloat16":
-            # npz can't round-trip ml_dtypes; fp32 upcast is lossless
-            arr = arr.astype(np.float32)
-        flat[key] = arr
+        flat[_path_key(path)] = _upcast(np.asarray(leaf))
     return flat
 
 
-def _unflatten_like(skeleton, flat: Dict[str, np.ndarray]):
+def _leaf_shape_dtype(leaf) -> Tuple[Tuple[int, ...], Any]:
+    """(shape, dtype) of an array or a ``jax.eval_shape`` skeleton leaf —
+    restore only needs the structure, never the skeleton's values."""
+    if hasattr(leaf, "shape") and hasattr(leaf, "dtype"):
+        return tuple(leaf.shape), leaf.dtype
+    arr = np.asarray(leaf)
+    return tuple(arr.shape), arr.dtype
+
+
+def _unflatten_like(skeleton, flat: Dict[str, np.ndarray],
+                    strict: bool = True):
+    """Restore into the structure of ``skeleton`` (arrays or eval_shape
+    structs). ``strict=False`` zero-fills leaves that are missing from
+    the checkpoint or shape-mismatched (e.g. error-feedback buffers
+    whose per-rank leading dim changed across a re-mesh) and returns
+    them in the report list."""
+    import jax.numpy as jnp
+
     paths_and_leaves, treedef = jax.tree_util.tree_flatten_with_path(skeleton)
-    leaves = []
+    leaves, dropped = [], []
     for path, leaf in paths_and_leaves:
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
-                       for p in path)
-        if key not in flat:
-            raise KeyError(f"checkpoint missing leaf {key!r}")
-        arr = flat[key]
-        want = np.asarray(leaf)
-        if tuple(arr.shape) != tuple(want.shape):
-            raise ValueError(f"{key}: checkpoint shape {arr.shape} != "
-                             f"state shape {want.shape}")
-        import jax.numpy as jnp
-        leaves.append(jnp.asarray(arr).astype(want.dtype))
-    return jax.tree_util.tree_unflatten(treedef, leaves)
+        key = _path_key(path)
+        want_shape, want_dtype = _leaf_shape_dtype(leaf)
+        arr = flat.get(key)
+        if arr is not None and tuple(arr.shape) != want_shape:
+            if strict:
+                raise ValueError(f"{key}: checkpoint shape {arr.shape} != "
+                                 f"state shape {want_shape}")
+            arr = None
+        if arr is None:
+            if strict:
+                raise KeyError(f"checkpoint missing leaf {key!r}")
+            dropped.append(key)
+            leaves.append(jnp.zeros(want_shape, want_dtype))
+            continue
+        leaves.append(jnp.asarray(arr).astype(want_dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves), dropped
+
+
+def _flat_state_and_specs(state, specs) -> List[Tuple[str, Any, Any]]:
+    """[(full-flatten key, raw array, PartitionSpec-or-None)] for every
+    leaf of ``state``.
+
+    ``specs`` is the state-shaped spec tree (``sharded_state_specs``):
+    a PartitionSpec sits exactly where the state has a ``Param`` (or a
+    bare array, e.g. the optimizer step scalar). Keys match
+    ``_flatten_with_paths`` so both formats restore through
+    ``_unflatten_like`` — a Param contributes its single flattened
+    child's index to the path.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    state_leaves = jax.tree_util.tree_flatten_with_path(
+        state, is_leaf=is_param)[0]
+    spec_leaves = [s for s in jax.tree_util.tree_flatten(
+        specs, is_leaf=lambda x: isinstance(x, P))[0]]
+    if len(spec_leaves) != len(state_leaves):
+        raise ValueError(
+            f"spec tree has {len(spec_leaves)} leaves for "
+            f"{len(state_leaves)} state leaves — pass the state-shaped "
+            f"spec tree (repro.train.step.sharded_state_specs)")
+    out = []
+    for (path, leaf), spec in zip(state_leaves, spec_leaves):
+        key = _path_key(path)
+        if is_param(leaf):
+            # the Param's value is flattened child 0 of the Param node
+            out.append((f"{key}/0", leaf.value, spec))
+        else:
+            out.append((key, leaf, spec))
+    return out
+
+
+def _shard_blocks(arr, spec, mesh_sizes) -> Dict[Tuple[int, ...], np.ndarray]:
+    """{grid-coordinate: host block} of one array — gather-free when the
+    array is a committed ``jax.Array`` (each block is one addressable
+    shard's data); a host/numpy array is sliced positionally instead."""
+    shape, _ = _leaf_shape_dtype(arr)
+    grid = shard_grid(spec, shape, mesh_sizes)
+    blocks: Dict[Tuple[int, ...], np.ndarray] = {}
+    shards = getattr(arr, "addressable_shards", None)
+    if shards:
+        for sh in shards:
+            coord = shard_coord(sh.index, shape, grid)
+            if coord not in blocks:
+                blocks[coord] = _upcast(np.asarray(sh.data))
+        n_blocks = int(np.prod(grid)) if grid else 1
+        if len(blocks) == n_blocks:
+            return blocks
+        blocks.clear()                 # layout disagreed with the spec
+    full = _upcast(np.asarray(arr))
+    for coord in np.ndindex(*grid) if grid else [()]:
+        slices = tuple(slice(c * (d // g), (c + 1) * (d // g))
+                       for c, d, g in zip(coord, shape, grid))
+        blocks[coord] = full[slices]
+    return blocks
 
 
 class CheckpointManager:
@@ -63,24 +178,22 @@ class CheckpointManager:
         self.keep = keep
         self.async_write = async_write
         self._thread: Optional[threading.Thread] = None
+        self.last_restore_report: List[str] = []
         os.makedirs(directory, exist_ok=True)
 
     # -- save ---------------------------------------------------------------
-    def save(self, step: int, state, extra_meta: Optional[dict] = None):
-        self.wait()
-        flat = _flatten_with_paths(state)      # host copy happens here
-        meta = {"step": int(step), "time": time.time(),
-                **(extra_meta or {})}
-
+    def _write_async(self, payload: Dict[str, np.ndarray], meta: Dict,
+                     step: int):
         def _write():
             tmp = os.path.join(self.dir, f".tmp_ckpt_{step}.npz")
-            dst = os.path.join(self.dir, f"ckpt_{step}.npz")
+            dst = os.path.join(self.dir, f"ckpt_{step}{_DATA_SUFFIX}")
+            side = os.path.join(self.dir, f"ckpt_{step}{_META_SUFFIX}")
             with open(tmp, "wb") as f:
-                np.savez(f, **flat)
+                np.savez(f, **payload)
             os.replace(tmp, dst)
-            with open(dst + ".json.tmp", "w") as f:
+            with open(side + ".tmp", "w") as f:
                 json.dump(meta, f)
-            os.replace(dst + ".json.tmp", dst + ".json")
+            os.replace(side + ".tmp", side)
             self._gc()
 
         if self.async_write:
@@ -88,6 +201,42 @@ class CheckpointManager:
             self._thread.start()
         else:
             _write()
+
+    def save(self, step: int, state, extra_meta: Optional[dict] = None):
+        """Full (replicated) save — every leaf written as one array."""
+        self.wait()
+        flat = _flatten_with_paths(state)      # host copy happens here
+        meta = {"step": int(step), "time": time.time(),
+                "format": FORMAT_FULL, **(extra_meta or {})}
+        self._write_async(flat, meta, step)
+
+    def save_sharded(self, step: int, state, *, mesh, strategy: str,
+                     specs, extra_meta: Optional[dict] = None):
+        """Gather-free sharded save.
+
+        ``specs`` is the state-shaped PartitionSpec tree the state is
+        actually sharded with (``sharded_state_specs``); ``mesh`` may be
+        a Mesh or an ``{axis: size}`` mapping. The sidecar records mesh
+        shape, strategy and per-leaf specs so restore can reshard.
+        """
+        from repro.dist.sharding import axis_sizes
+
+        self.wait()
+        sizes = axis_sizes(mesh)
+        payload: Dict[str, np.ndarray] = {}
+        spec_json: Dict[str, list] = {}
+        for key, arr, spec in _flat_state_and_specs(state, specs):
+            spec = spec if spec is not None else ()
+            spec_json[key] = spec_to_json(spec)
+            for coord, block in _shard_blocks(arr, spec, sizes).items():
+                ck = "_".join(str(c) for c in coord)
+                payload[f"{key}{_SHARD_SEP}{ck}"] = block
+        meta = {"step": int(step), "time": time.time(),
+                "format": FORMAT_SHARDED,
+                "mesh": {str(a): int(s) for a, s in sizes.items()},
+                "strategy": str(strategy),
+                "specs": spec_json, **(extra_meta or {})}
+        self._write_async(payload, meta, step)
 
     def wait(self):
         if self._thread is not None:
@@ -107,24 +256,77 @@ class CheckpointManager:
         steps = self.available_steps()
         return steps[-1] if steps else None
 
-    def restore(self, skeleton, step: Optional[int] = None
-                ) -> Tuple[Any, int]:
-        """Restore into the structure of ``skeleton``. Returns (state, step).
-        Tries newest-first; skips corrupt files (fault tolerance)."""
+    def read_meta(self, step: int) -> Dict:
+        """The JSON sidecar of one checkpoint step."""
+        with open(os.path.join(self.dir,
+                               f"ckpt_{step}{_META_SUFFIX}")) as f:
+            return json.load(f)
+
+    def _assemble(self, path: str, meta: Dict) -> Dict[str, np.ndarray]:
+        """Flat {leaf key: full host array} from either format."""
+        with np.load(path) as z:
+            raw = {k: z[k] for k in z.files}
+        if meta.get("format", FORMAT_FULL) != FORMAT_SHARDED:
+            return raw
+        mesh = meta["mesh"]
+        specs = meta["specs"]
+        grouped: Dict[str, Dict[Tuple[int, ...], np.ndarray]] = {}
+        for name, block in raw.items():
+            key, _, ck = name.rpartition(_SHARD_SEP)
+            coord = tuple(int(c) for c in ck.split("_")) if ck else ()
+            grouped.setdefault(key, {})[coord] = block
+        flat = {}
+        for key, blocks in grouped.items():
+            spec = spec_from_json(specs[key])
+            grid = tuple(
+                max(c[i] for c in blocks) + 1
+                for i in range(len(next(iter(blocks)))))
+            shape = tuple(
+                b * g for b, g in zip(
+                    next(iter(blocks.values())).shape, grid))
+            # sanity: the recorded spec on the recorded mesh must
+            # reproduce the block grid the file actually contains
+            if shard_grid(spec, shape, mesh) != grid:
+                raise ValueError(
+                    f"{key}: sidecar spec {spec} on mesh {mesh} "
+                    f"disagrees with on-disk block grid {grid}")
+            flat[key] = assemble_shards(blocks, shape, grid)
+        return flat
+
+    def restore(self, skeleton, step: Optional[int] = None, *,
+                shardings=None, strict: bool = True) -> Tuple[Any, int]:
+        """Restore into the structure of ``skeleton``. Returns
+        (state, step). Tries newest-first; skips corrupt files.
+
+        ``skeleton`` may be real arrays or a ``jax.eval_shape`` struct.
+        Sharded checkpoints are reassembled to full host arrays first;
+        passing ``shardings`` (a state-shaped NamedSharding tree for the
+        *target* mesh/strategy, e.g. ``sharded_state_shardings``) then
+        re-places every leaf — this is reshard-on-restore, and works
+        across strategies and mesh shapes because the target specs come
+        from the same ``param_pspecs`` resolution the executable step
+        uses. ``strict=False`` zero-fills missing/mismatched leaves
+        (recorded in ``last_restore_report``).
+        """
         self.wait()
         steps = self.available_steps()
         if step is not None:
             steps = [s for s in steps if s == step]
         last_err: Optional[Exception] = None
         for s in reversed(steps):
-            path = os.path.join(self.dir, f"ckpt_{s}.npz")
+            path = os.path.join(self.dir, f"ckpt_{s}{_DATA_SUFFIX}")
             try:
-                with np.load(path) as z:
-                    flat = {k: z[k] for k in z.files}
-                return _unflatten_like(skeleton, flat), s
+                meta = self.read_meta(s)
+                flat = self._assemble(path, meta)
+                state, dropped = _unflatten_like(skeleton, flat,
+                                                 strict=strict)
             except Exception as e:        # corrupt/partial -> try older
                 last_err = e
                 continue
+            self.last_restore_report = dropped
+            if shardings is not None:
+                state = jax.device_put(state, shardings)
+            return state, s
         if last_err is not None:
             raise last_err
         raise FileNotFoundError(f"no checkpoint in {self.dir}")
@@ -133,15 +335,19 @@ class CheckpointManager:
     def _gc(self):
         steps = self.available_steps()
         for s in steps[:-self.keep] if self.keep else []:
-            for suffix in (".npz", ".npz.json"):
+            for suffix in (_DATA_SUFFIX, _META_SUFFIX):
                 try:
                     os.remove(os.path.join(self.dir, f"ckpt_{s}{suffix}"))
                 except OSError:
                     pass
-        # orphan temp files
+        # orphan temp files and sidecars whose data file is gone
         for name in os.listdir(self.dir):
-            if name.startswith(".tmp_ckpt_"):
+            full = os.path.join(self.dir, name)
+            orphan_tmp = name.startswith(".tmp_ckpt_")
+            orphan_side = (name.endswith(_META_SUFFIX) and not
+                           os.path.exists(full[:-len(".json")]))
+            if orphan_tmp or orphan_side:
                 try:
-                    os.remove(os.path.join(self.dir, name))
+                    os.remove(full)
                 except OSError:
                     pass

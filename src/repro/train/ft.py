@@ -94,3 +94,97 @@ def plan_remesh(n_devices: int, *, min_model: int = 1,
                                              - math.log2(max(dm[1], 1))))
         reason = "most-square fallback"
     return ElasticPlan(best, ("data", "model"), reason)
+
+
+@dataclass
+class RecoveryPlan:
+    """The full decision a failure recovery executes: which strategy to
+    run on the surviving pool, and which mesh factorization to give it."""
+    strategy: str
+    mesh_shape: Tuple[int, ...]
+    axis_names: Tuple[str, ...]
+    n_devices: int                     # devices the new mesh uses
+    reason: str
+    decision: Optional[object] = None  # planner StrategyDecision, if any
+
+    def to_dict(self) -> dict:
+        out = {"strategy": self.strategy,
+               "mesh": list(self.mesh_shape),
+               "axis_names": list(self.axis_names),
+               "devices": self.n_devices, "reason": self.reason}
+        if self.decision is not None:
+            out["planner"] = self.decision.to_dict()
+        return out
+
+
+# Structural mesh constraints per registry strategy: dp/fsdp shard over
+# "data" only (a >1 model axis would idle devices); the tp family needs
+# a real model axis to shard anything.
+def _model_axis_bounds(strategy: str, n: int
+                       ) -> Tuple[int, Optional[int]]:
+    if strategy in ("dp", "fsdp"):
+        return 1, 1
+    if strategy == "fsdp_tp":
+        return (2, None) if n >= 2 else (1, None)
+    return (2, None) if n >= 2 else (1, None)        # tp-like
+
+
+def plan_recovery(cfg, n_devices: int, *, batch: int, seq: int,
+                  optimizer: str = "adamw", compression: str = "none",
+                  strategy: Optional[str] = None,
+                  compute_ref: Optional[Tuple[float, int]] = None,
+                  mem_budget_bytes: Optional[int] = None,
+                  calibration=None,
+                  choose: Optional[Callable] = None,
+                  make_predict: Optional[Callable] = None) -> RecoveryPlan:
+    """Plan the post-failure (strategy, mesh) for a shrunken device pool.
+
+    This is where the fitted performance model becomes the recovery
+    policy: ``repro.perf.planner.auto.choose_strategy`` ranks the
+    registry for the surviving device count (unless ``strategy`` forces
+    one), and ``plan_remesh`` ranks the candidate (data, model)
+    factorizations under ``remesh_predict`` — calibrated collective cost
+    plus a compute term from ``compute_ref = (measured step seconds,
+    data width)``, with infeasible shapes priced to ``inf``.
+
+    ``choose`` / ``make_predict`` are injectable stand-ins for
+    ``choose_strategy`` / ``remesh_predict`` (tests); both default to a
+    lazy planner import so ``repro.train`` stays importable without the
+    perf stack loaded.
+    """
+    n = int(n_devices)
+    n_eff = 2 ** int(math.floor(math.log2(n))) if n > 1 else max(n, 1)
+    extra = {}
+    if mem_budget_bytes is not None:
+        extra["mem_budget_bytes"] = mem_budget_bytes
+    if calibration is not None:
+        extra["calibration"] = calibration
+
+    decision = None
+    if strategy is None:
+        if choose is None:
+            from repro.perf.planner.auto import choose_strategy as choose
+        decision = choose(cfg, batch=batch, seq=seq, n_devices=n_eff,
+                          optimizer=optimizer, compression=compression,
+                          **extra)
+        strategy = decision.strategy
+
+    if make_predict is None:
+        from repro.perf.planner.auto import remesh_predict as make_predict
+    predict = make_predict(cfg, strategy, batch=batch, seq=seq,
+                           optimizer=optimizer, compression=compression,
+                           compute_ref=compute_ref, **extra)
+
+    min_model, max_model = _model_axis_bounds(strategy, n_eff)
+    plan = plan_remesh(n_eff, min_model=min_model, max_model=max_model,
+                       predict=predict)
+    used = 1
+    for s in plan.mesh_shape:
+        used *= int(s)
+    reason = f"strategy={strategy}"
+    if decision is not None:
+        reason += f" ({decision.reason})"
+    reason += f"; mesh {plan.reason}"
+    return RecoveryPlan(strategy=strategy, mesh_shape=plan.mesh_shape,
+                        axis_names=plan.axis_names, n_devices=used,
+                        reason=reason, decision=decision)

@@ -1,0 +1,91 @@
+"""Fault-injection harness for the elastic-training tests.
+
+Three injector families, matching the failures the elastic subsystem
+claims to survive (tests/test_elastic.py, tools/elastic_smoke.py):
+
+* **kill_devices** — simulated device loss: the surviving prefix of the
+  pool, from which a smaller mesh is built in-process (the same move
+  ``launch/train --simulate-failure`` makes);
+* **corrupt_checkpoint** — disk faults against the checkpoint directory:
+  garbled payload, truncated write, missing sidecar;
+* **slow_rank_times** — a synthetic step-time series with straggling
+  ranks, for exercising ``StragglerDetector`` boundary behaviour.
+
+These are plain helpers, not fixtures — they must also be importable
+from subprocess snippets that run on a forced device pool.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import List, Optional, Sequence
+
+_CKPT_RE = re.compile(r"ckpt_(\d+)\.npz$")
+
+
+# ---------------------------------------------------------------------------
+# Device loss
+# ---------------------------------------------------------------------------
+
+def kill_devices(devices: Sequence, n_lost: int) -> List:
+    """The surviving devices after ``n_lost`` die (prefix-surviving, the
+    convention the train driver uses: ranks are renumbered contiguously
+    on recovery, so *which* devices die does not matter to the plan)."""
+    n_lost = max(int(n_lost), 0)
+    survivors = list(devices)[:max(len(devices) - n_lost, 1)]
+    return survivors
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint corruption
+# ---------------------------------------------------------------------------
+
+def _step_path(directory: str, step: Optional[int]) -> str:
+    steps = sorted(int(m.group(1)) for m in
+                   (_CKPT_RE.match(n) for n in os.listdir(directory)) if m)
+    if not steps:
+        raise FileNotFoundError(f"no checkpoint data files in {directory}")
+    s = steps[-1] if step is None else int(step)
+    return os.path.join(directory, f"ckpt_{s}.npz")
+
+
+def corrupt_checkpoint(directory: str, step: Optional[int] = None,
+                       mode: str = "garble") -> str:
+    """Damage one checkpoint (newest by default); returns the path hit.
+
+    ``garble``       overwrite the payload with non-npz bytes
+    ``truncate``     keep only the first half of the payload (the
+                     torn-write case atomic replace is meant to prevent
+                     — injected here to prove restore still survives it)
+    ``drop_sidecar`` remove the JSON sidecar (checkpoint becomes
+                     invisible to ``available_steps``)
+    """
+    path = _step_path(directory, step)
+    if mode == "garble":
+        with open(path, "wb") as f:
+            f.write(b"not an npz file")
+    elif mode == "truncate":
+        size = os.path.getsize(path)
+        with open(path, "rb") as f:
+            head = f.read(size // 2)
+        with open(path, "wb") as f:
+            f.write(head)
+    elif mode == "drop_sidecar":
+        os.remove(path + ".json")
+    else:
+        raise ValueError(f"unknown corruption mode {mode!r}")
+    return path
+
+
+# ---------------------------------------------------------------------------
+# Stragglers
+# ---------------------------------------------------------------------------
+
+def slow_rank_times(base_s: float, n_steps: int, slow_at: Sequence[int],
+                    factor: float) -> List[float]:
+    """Per-step wall times of a run where the steps in ``slow_at`` are
+    dragged ``factor``× by a straggling rank (a step is as slow as its
+    slowest participant)."""
+    slow = set(int(s) for s in slow_at)
+    return [base_s * (factor if i in slow else 1.0)
+            for i in range(int(n_steps))]

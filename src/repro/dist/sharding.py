@@ -53,12 +53,18 @@ from __future__ import annotations
 import threading
 from contextlib import contextmanager
 from dataclasses import dataclass, field
+from functools import partial
 from typing import Dict, Mapping, Optional, Sequence, Tuple, Union
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.models.layers import is_param
+# LocalDim / tp_f / tp_probe live in repro.models.layers (which must not
+# import repro.dist.*) and are re-exported here as the canonical API the
+# distribution-side code imports them from.
+from repro.models.layers import (LocalDim, StreamDim,  # noqa: F401
+                                 is_param, local_dim, tp_f, tp_g, tp_probe,
+                                 tp_probe_sink)
 
 
 class _BatchSentinel:
@@ -531,3 +537,55 @@ def shard_of_full(x: jax.Array, spec: P, mesh: MeshLike) -> jax.Array:
         block = x.shape[dim] // prod
         x = jax.lax.dynamic_slice_in_dim(x, idx * block, block, axis=dim)
     return x
+
+
+# ---------------------------------------------------------------------------
+# Streaming (per-layer) parameter gathers with fused backward reduce-scatter
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+def stream_gather(entries: Tuple, sizes: Tuple[Tuple[str, int], ...],
+                  batch_axes: Tuple[str, ...], mode: str,
+                  x: jax.Array) -> jax.Array:
+    """All-gather a ZeRO-sharded leaf *inside* the compute it feeds.
+
+    Forward is ``gather_to_full`` for one leaf; backward fuses the
+    gradient mean-reduction over the batch axes (in the wire-compressed
+    format ``mode``) with the slice back to this device's block — i.e.
+    the fsdp reduce-scatter. Called from inside the per-layer
+    ``lax.scan`` body, this interleaves parameter gathers and gradient
+    reduce-scatters with each layer's matmuls instead of serializing one
+    whole-tree gather before the loss and one whole-tree reduction after
+    it — which is what lets XLA hide collective latency behind compute,
+    and shrinks the peak transient-gather footprint from all parameter
+    bytes to one layer's worth.
+
+    ``entries``/``sizes``/``batch_axes``/``mode`` are static (hashable)
+    so the pair of transfers stays a single jaxpr primitive pair:
+    ``entries`` are the per-dim PartitionSpec entries the leaf entered
+    the shard_map with, ``sizes`` the mesh ``{axis: size}`` as sorted
+    pairs. The gradient that reaches the optimizer for a streamed leaf
+    is therefore *already* reduced and sliced — the step body must not
+    reduce it again.
+    """
+    for dim, entry in enumerate(entries):
+        if entry is None:
+            continue
+        for a in reversed(_axes_of(entry)):
+            x = jax.lax.all_gather(x, a, axis=dim, tiled=True)
+    return x
+
+
+def _stream_gather_fwd(entries, sizes, batch_axes, mode, x):
+    return stream_gather(entries, sizes, batch_axes, mode, x), None
+
+
+def _stream_gather_bwd(entries, sizes, batch_axes, mode, _, g):
+    from repro.dist.compression import compressed_psum_mean
+    if batch_axes:
+        g = compressed_psum_mean(g, batch_axes, mode=mode)
+    g = shard_of_full(g, P(*entries), dict(sizes))
+    return (g,)
+
+
+stream_gather.defvjp(_stream_gather_fwd, _stream_gather_bwd)

@@ -24,7 +24,8 @@ import jax.numpy as jnp
 from repro.configs.base import MLAConfig, ModelConfig
 from repro.dist.sharding import BATCH, maybe_constrain
 from repro.models.layers import (NEG_INF, Param, Params, apply_rope, dense,
-                                 init_dense, make_param, softcap)
+                                 init_dense, local_dim, make_param, softcap,
+                                 tp_f, tp_probe)
 
 
 class AttnSpec(NamedTuple):
@@ -190,13 +191,25 @@ def gqa_forward(params: Params, x: jax.Array, cfg: ModelConfig,
     """
     B, S, D = x.shape
     hd = cfg.get_head_dim()
-    q = maybe_constrain(dense(params["wq"], x).reshape(B, S, cfg.n_heads,
-                                                       hd), BATCH)
+    # Tensor-parallel heads (manual path): a LocalDim marker on the wq/wk
+    # output dims means this rank holds a 1/m head slice; project from an
+    # f-wrapped input (identity fwd / psum bwd) and attend over the local
+    # head counts. wo's row psum is inserted by dense() from its marker.
+    nH, nKV = cfg.n_heads, cfg.n_kv_heads
+    colq = local_dim(params["wq"]["kernel"].axes[-1])
+    colk = local_dim(params["wk"]["kernel"].axes[-1])
+    if colq is not None:
+        x = tp_f(colq.axis, x)
+        nH //= colq.size
+    if colk is not None:
+        nKV //= colk.size
+    q = maybe_constrain(dense(params["wq"], x).reshape(B, S, nH, hd), BATCH)
+    q = tp_probe("attn_q", q)
     if kv_override is None:
         k = maybe_constrain(
-            dense(params["wk"], x).reshape(B, S, cfg.n_kv_heads, hd), BATCH)
+            dense(params["wk"], x).reshape(B, S, nKV, hd), BATCH)
         v = maybe_constrain(
-            dense(params["wv"], x).reshape(B, S, cfg.n_kv_heads, hd), BATCH)
+            dense(params["wv"], x).reshape(B, S, nKV, hd), BATCH)
         q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, positions, cfg.rope_theta)
     else:
@@ -218,7 +231,7 @@ def gqa_forward(params: Params, x: jax.Array, cfg: ModelConfig,
         kv_pos = q_pos if kv_override is None else jnp.arange(k.shape[1])
         o = attend(q, k, v, q_pos, kv_pos, spec, block=cfg.attn_block)
         new_cache = (k, v, q_pos)
-    y = dense(params["wo"], o.reshape(B, S, cfg.n_heads * hd))
+    y = dense(params["wo"], o.reshape(B, S, nH * hd))
     return y, new_cache
 
 
@@ -246,17 +259,34 @@ def init_mla(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
     }
 
 
+def _mla_local_heads(params: Params, cfg: ModelConfig) -> int:
+    """Per-rank head count: n_heads / ring when wq_b carries a LocalDim."""
+    col = local_dim(params["wq_b"]["kernel"].axes[-1])
+    return cfg.n_heads // col.size if col is not None else cfg.n_heads
+
+
 def _mla_qkv(params: Params, x: jax.Array, cfg: ModelConfig,
              positions: jax.Array):
     """Shared projection math. Returns q_nope,q_rope,latent,k_rope."""
     m = cfg.mla
     B, S, _ = x.shape
     H = cfg.n_heads
-    q = dense(params["wq_b"], dense(params["wq_a"], x))
+    lat_q = dense(params["wq_a"], x)
+    kv = dense(params["wkv_a"], x)
+    col = local_dim(params["wq_b"]["kernel"].axes[-1])
+    if col is not None:
+        # Head-parallel MLA: the f operators sit *after* the replicated
+        # down-projections (wq_a / wkv_a), so their weight grads — and
+        # the cotangent flowing upstream — are completed by the psum;
+        # only the head-sliced up-projections see partial cotangents.
+        H //= col.size
+        lat_q = tp_f(col.axis, lat_q)
+        kv = tp_f(col.axis, kv)
+    q = dense(params["wq_b"], lat_q)
     q = q.reshape(B, S, H, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q = tp_probe("attn_q", q)
     q_nope = q[..., :m.qk_nope_head_dim]
     q_rope = apply_rope(q[..., m.qk_nope_head_dim:], positions, cfg.rope_theta)
-    kv = dense(params["wkv_a"], x)
     latent = kv[..., :m.kv_lora_rank]                      # [B,S,rank]
     k_rope = apply_rope(kv[..., m.kv_lora_rank:][:, :, None, :],
                         positions, cfg.rope_theta)[:, :, 0]  # [B,S,rope_hd]
@@ -275,7 +305,7 @@ def mla_forward(params: Params, x: jax.Array, cfg: ModelConfig,
     """
     m = cfg.mla
     B, S, _ = x.shape
-    H = cfg.n_heads
+    H = _mla_local_heads(params, cfg)
     scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
     q_nope, q_rope, latent, k_rope = _mla_qkv(params, x, cfg, positions)
 

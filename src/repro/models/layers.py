@@ -10,6 +10,10 @@ on a 512-chip multi-pod mesh.
 from __future__ import annotations
 
 import math
+import threading
+from contextlib import contextmanager
+from dataclasses import dataclass
+from functools import partial
 from typing import Any, Dict, NamedTuple, Optional, Sequence, Tuple
 
 import jax
@@ -43,6 +47,126 @@ class Param:
 
 
 Params = Any  # nested dict of Param
+
+
+@dataclass(frozen=True)
+class LocalDim:
+    """Axes-entry marker: this dimension holds a 1/``size`` *local* slice.
+
+    The manual (shard_map) tensor-parallel step rewrites the axes tuples
+    of the parameters it keeps sharded over the model axis, replacing the
+    logical name with ``LocalDim(logical, axis, size)``. Layer code
+    branches on ``isinstance(entry, LocalDim)`` to insert the Megatron
+    collectives (row-parallel ``psum``, the ``tp_f`` identity/psum pair)
+    — everything else sees plain logical names and runs unchanged.
+
+    NB: inside ``lax.scan`` bodies the *values* are layer-sliced while
+    the static axes tuples keep their leading "layers" entry, so checks
+    must index axes from the right (``axes[-1]``, ``axes[-2]``, ...).
+    """
+    logical: str
+    axis: str
+    size: int
+
+
+def local_dim(entry) -> Optional["LocalDim"]:
+    return entry if isinstance(entry, LocalDim) else None
+
+
+@dataclass(frozen=True)
+class StreamDim:
+    """Axes-entry marker: this dim is ZeRO-sharded and *streamed*.
+
+    The overlap train step leaves such leaves sharded and the per-layer
+    scan body all-gathers them just before use (``stream_gather`` in
+    ``repro.dist.sharding``), so parameter gathers and gradient
+    reduce-scatters interleave with each layer's compute instead of
+    serializing around the loss. ``entry`` is the PartitionSpec entry of
+    the dim (mesh-axis name or tuple of names).
+    """
+    logical: Optional[str]
+    entry: Any
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def tp_f(axis_name: str, x: jax.Array) -> jax.Array:
+    """Megatron's ``f`` operator: identity forward, all-reduce backward.
+
+    Placed at the entry of each *partitioned* sub-path (MLP input,
+    attention input, MoE dispatch) so the backward pass completes the
+    partial input-cotangents each model rank produces. It must wrap only
+    partitioned sub-paths: the transpose of ``psum`` is the identity, so
+    a replicated sub-path sharing an ``f``-wrapped input would get its
+    (already complete) cotangent multiplied by the ring size.
+    """
+    return x
+
+
+def _tp_f_fwd(axis_name, x):
+    return x, None
+
+
+def _tp_f_bwd(axis_name, _, g):
+    return (jax.lax.psum(g, axis_name),)
+
+
+tp_f.defvjp(_tp_f_fwd, _tp_f_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def tp_g(axis_name: str, x: jax.Array) -> jax.Array:
+    """Megatron's ``g`` operator: all-reduce forward, identity backward.
+
+    Closes a row-parallel product (partial per-rank sums -> full output).
+    It must be this custom pair rather than a raw ``lax.psum``: under
+    ``shard_map(check_rep=False)`` the transpose of ``psum`` is ``psum``
+    again, which would multiply the (replicated) output cotangent by the
+    ring size on the way back. The true adjoint of "sum the partials" is
+    "hand each rank the output cotangent unchanged".
+    """
+    return jax.lax.psum(x, axis_name)
+
+
+def _tp_g_fwd(axis_name, x):
+    return jax.lax.psum(x, axis_name), None
+
+
+def _tp_g_bwd(axis_name, _, g):
+    return (g,)
+
+
+tp_g.defvjp(_tp_g_fwd, _tp_g_bwd)
+
+
+class _TpProbe(threading.local):
+    def __init__(self):
+        self.sink = None
+
+
+_TP_PROBE = _TpProbe()
+
+
+@contextmanager
+def tp_probe_sink(records: list):
+    """Record ``(tag, shape)`` of probed activations at trace time.
+
+    ``tools/overlap_smoke.py`` uses this to prove the manual tp step
+    really shards activations over the model axis: tracing the step with
+    a sink installed captures the *local* hidden shapes seen inside the
+    shard_map body.
+    """
+    prev = _TP_PROBE.sink
+    _TP_PROBE.sink = records
+    try:
+        yield records
+    finally:
+        _TP_PROBE.sink = prev
+
+
+def tp_probe(tag: str, x: jax.Array) -> jax.Array:
+    if _TP_PROBE.sink is not None:
+        _TP_PROBE.sink.append((tag, tuple(x.shape)))
+    return x
 
 
 def is_param(x) -> bool:
@@ -182,6 +306,9 @@ def init_dense(key, d_in: int, d_out: int, axes: Tuple[Optional[str], ...],
 
 def dense(params: Params, x: jax.Array) -> jax.Array:
     y = jnp.einsum("...d,df->...f", x, params["kernel"].value)
+    row = local_dim(params["kernel"].axes[-2])
+    if row is not None:  # row-parallel: partial products, reduce before bias
+        y = tp_g(row.axis, y)
     if "bias" in params:
         y = y + params["bias"].value
     return y
@@ -200,11 +327,15 @@ def init_mlp(key, d_model: int, d_ff: int, activation: str,
 
 def mlp(params: Params, x: jax.Array, activation: str) -> jax.Array:
     act = activation_fn(activation)
+    col = local_dim(params["up"]["kernel"].axes[-1])
+    if col is not None:  # column-parallel entry: complete cotangents on bwd
+        x = tp_f(col.axis, x)
     up = dense(params["up"], x)
     if "gate" in params:
         h = act(dense(params["gate"], x)) * up
     else:
         h = act(up)
+    h = tp_probe("mlp_hidden", h)
     return dense(params["down"], h)
 
 

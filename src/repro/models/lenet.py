@@ -14,7 +14,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.lenet5 import DATASET_SHAPES, LeNet5Config, N_CLASSES
-from repro.models.layers import Param, Params, activation_fn, make_param
+from repro.models.layers import (Param, Params, activation_fn, local_dim,
+                                 make_param, tp_f, tp_g, tp_probe)
 
 
 def _eff_padding(n: int, k: int, padding: str) -> str:
@@ -90,11 +91,25 @@ def lenet_forward(params: Params, images: jax.Array, cfg: LeNet5Config,
     x = act(_conv(x, params["conv2"].value, cfg.stride, cfg.padding))
     x = _pool(x, cfg.pool_size)
     x = x.reshape(x.shape[0], -1)
+    # Megatron split of the fc pair (manual tp path): a LocalDim marker on
+    # fc1's output dim makes the hidden a 1/m column slice (enter through
+    # f so backward completes the input cotangent); the matching marker on
+    # fc2's input dim makes its product partial, reduced before the
+    # activation. NB under dropout the per-rank masks cover different
+    # hidden slices — fine for the timing sweep, parity tests use p=0.
+    col = local_dim(params["fc1"].axes[-1])
+    if col is not None:
+        x = tp_f(col.axis, x)
     x = act(x @ params["fc1"].value)
+    x = tp_probe("lenet_fc1", x)
     if train and cfg.dropout > 0:
         keep = jax.random.bernoulli(rng, 1.0 - cfg.dropout, x.shape)
         x = jnp.where(keep, x / (1.0 - cfg.dropout), 0.0)
-    x = act(x @ params["fc2"].value)
+    h = x @ params["fc2"].value
+    row = local_dim(params["fc2"].axes[-2])
+    if row is not None:
+        h = tp_g(row.axis, h)
+    x = act(h)
     return x @ params["out"].value
 
 

@@ -23,23 +23,25 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import threading
+from contextlib import contextmanager
 from dataclasses import dataclass
 from functools import partial
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, FrozenSet, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ATTN, ATTN_LOCAL, ModelConfig, SSM
-from repro.dist.sharding import BATCH, maybe_constrain
+from repro.dist.sharding import BATCH, maybe_constrain, stream_gather
 from repro.models import attention as A
 from repro.models import moe as M
 from repro.models import ssm as S
 from repro.models.attention import AttnSpec
-from repro.models.layers import (Param, Params, dense, init_dense,
+from repro.models.layers import (Param, Params, StreamDim, dense, init_dense,
                                  init_embedding, init_mlp, init_rmsnorm,
-                                 make_param, mlp, paxes, pvalues, rmsnorm,
-                                 softcap, unembed, with_values)
+                                 is_param, make_param, mlp, paxes, pvalues,
+                                 rmsnorm, softcap, unembed, with_values)
 
 MASK_ID = -1                 # label value that is excluded from the loss
 EMPTY_POS = 2 ** 30          # ring-cache "empty slot" position: +huge so the
@@ -89,6 +91,44 @@ def build_segments(cfg: ModelConfig) -> List[SegmentSpec]:
     if cfg.is_encoder_decoder:
         return [SegmentSpec("dec_attn", cfg.n_layers)]
     return [SegmentSpec("attn_mlp", cfg.n_layers)]
+
+
+def tp_live_axes(cfg: ModelConfig, m: int) -> FrozenSet[str]:
+    """Logical axes the manual tp step may keep *local* (partitioned).
+
+    This is the semantic gate on top of the resolver's per-leaf
+    divisibility rules: a logical name is "live" only when every layer
+    that consumes leaves tagged with it handles a LocalDim marker.
+
+      * heads/kv_heads couple for GQA: ``attend`` derives the group size
+        from the shapes and q heads are laid out kv-major, so per-rank
+        slices only align when both are cut by the same factor. MLA has
+        no kv projection, so only n_heads gates it.
+      * "mlp" is excluded whenever the stack contains ssm blocks: mamba2
+        tags its packed in/out projections "mlp" with mixed per-channel
+        semantics ([z, x, B, C, dt] share one dim) that no slice honours.
+      * "expert" needs E % m == 0 for the expert-local dispatch; the
+        router is excluded separately (its *last* dim is "expert" but
+        routing needs full logits — see the step's plan builder).
+      * "vocab"/"embed" never partition: the CE/logits path and the
+        residual stream consume full arrays.
+      * encoder-decoder stacks are excluded entirely: the cross-KV
+        precompute reads segment weights outside the marker-aware paths.
+    """
+    if m <= 1 or cfg.is_encoder_decoder:
+        return frozenset()
+    kinds = {s.kind for s in build_segments(cfg)}
+    live = set()
+    if not (kinds & {"ssm", "zamba_group"}):
+        live.add("mlp")
+    if cfg.mla is not None:
+        if cfg.n_heads % m == 0:
+            live.add("heads")
+    elif cfg.n_heads % m == 0 and cfg.n_kv_heads % m == 0:
+        live.update(("heads", "kv_heads"))
+    if cfg.moe is not None and cfg.moe.n_experts % m == 0:
+        live.add("expert")
+    return frozenset(live)
 
 
 # ---------------------------------------------------------------------------
@@ -271,6 +311,59 @@ def apply_block(params: Params, x, cfg: ModelConfig, kind: str, *,
 
 
 # ---------------------------------------------------------------------------
+# Streaming parameter gathers (overlap train step)
+# ---------------------------------------------------------------------------
+# The overlap step leaves ZeRO-sharded segment leaves sharded, marks the
+# sharded dims with StreamDim in the axes tuples, and installs this
+# context while the loss traces; the per-layer scan bodies then gather
+# each leaf *inside* the layer's compute (repro.dist.sharding.
+# stream_gather, whose custom backward is the fused reduce-scatter).
+# Trace-time thread-local, same pattern as sharding.manual_mode.
+
+class _StreamCtx(threading.local):
+    def __init__(self):
+        self.cfg = None
+
+
+_STREAM = _StreamCtx()
+
+
+@contextmanager
+def stream_context(sizes: Tuple[Tuple[str, int], ...],
+                   batch_axes: Tuple[str, ...], mode: str):
+    """sizes: mesh {axis: size} as sorted pairs; mode: grad wire format."""
+    prev = _STREAM.cfg
+    _STREAM.cfg = (tuple(sizes), tuple(batch_axes), mode)
+    try:
+        yield
+    finally:
+        _STREAM.cfg = prev
+
+
+def _stream_in(p: Param) -> Param:
+    """Gather one scanned leaf's StreamDim dims; identity when unmarked."""
+    if not any(isinstance(e, StreamDim) for e in p.axes):
+        return p
+    if _STREAM.cfg is None:
+        raise RuntimeError("StreamDim-marked params outside a "
+                           "stream_context (overlap train step)")
+    sizes, batch_axes, mode = _STREAM.cfg
+    nd = p.value.ndim
+    # scan slices values per-layer but axes keep the leading "layers"
+    # entry; align entries to the value's trailing dims
+    entries = tuple(e.entry if isinstance(e, StreamDim) else None
+                    for e in p.axes[-nd:]) if nd else ()
+    v = stream_gather(entries, sizes, batch_axes, mode, p.value)
+    axes = tuple(e.logical if isinstance(e, StreamDim) else e
+                 for e in p.axes)
+    return Param(v, axes)
+
+
+def stream_in_params(tree):
+    return jax.tree.map(_stream_in, tree, is_leaf=is_param)
+
+
+# ---------------------------------------------------------------------------
 # Segment apply (scan over stacked layers)
 # ---------------------------------------------------------------------------
 
@@ -312,6 +405,7 @@ def apply_segment(params: Params, x, cfg: ModelConfig, seg: SegmentSpec, *,
 
     def body(h, xs):
         p, c = xs
+        p = stream_in_params(p)
         h, new_c, aux = apply_block(p, h, cfg, seg.kind, positions=positions,
                                     cache=c, cache_pos=cache_pos,
                                     window=seg.window, causal=seg.causal,
@@ -323,6 +417,7 @@ def apply_segment(params: Params, x, cfg: ModelConfig, seg: SegmentSpec, *,
     if seg.kind == "dec_attn":
         def body(h, xs):                                  # noqa: F811
             p, c, ekv = xs
+            p = stream_in_params(p)
             h, new_c, aux = apply_block(p, h, cfg, seg.kind,
                                         positions=positions, cache=c,
                                         cache_pos=cache_pos, enc_kv=ekv)

@@ -25,7 +25,7 @@ import jax.numpy as jnp
 from repro.configs.base import MoEConfig, ModelConfig
 from repro.dist.sharding import BATCH, maybe_constrain
 from repro.models.layers import (Params, activation_fn, dense, init_dense,
-                                 make_param)
+                                 local_dim, make_param, tp_f, tp_g, tp_probe)
 
 
 class MoEOut(NamedTuple):
@@ -103,17 +103,48 @@ def moe_forward(params: Params, x: jax.Array, cfg: ModelConfig,
     keep = ranks < C
     dest = jnp.where(keep, flat_ids * C + ranks, e.n_experts * C)
 
+    # Tensor-parallel expert FFN (manual path): a LocalDim marker on
+    # w_gate's expert dim means this rank owns E/m experts (expert-local);
+    # a marker on its ff dim means every expert's hidden is column-sliced
+    # (row-parallel w_down). Either way the *dispatch* sub-path enters
+    # through the f operator while the router/combine math stays on the
+    # un-wrapped xt — the router's (replicated) cotangent must not be
+    # multiplied by the ring size in f's backward psum.
+    ex = local_dim(params["w_gate"].axes[-3])
+    ff_col = local_dim(params["w_gate"].axes[-1])
+    disp = xt
+    if ex is not None:
+        disp = tp_f(ex.axis, disp)
+    elif ff_col is not None:
+        disp = tp_f(ff_col.axis, disp)
+
     # scatter token rows into per-expert buffers (+1 overflow row)
-    rows = jnp.repeat(xt, k, axis=0)                            # [T*k, D]
+    rows = jnp.repeat(disp, k, axis=0)                          # [T*k, D]
     buf = jnp.zeros((e.n_experts * C + 1, D), xt.dtype).at[dest].add(rows)
     h = maybe_constrain(
         buf[:e.n_experts * C].reshape(e.n_experts, C, D), "model")
 
     # batched expert FFN (always gated-silu in the assigned MoE archs)
     act = activation_fn("silu")
-    g = jnp.einsum("ecd,edf->ecf", h, params["w_gate"].value)
-    u = jnp.einsum("ecd,edf->ecf", h, params["w_up"].value)
-    out = jnp.einsum("ecf,efd->ecd", act(g) * u, params["w_down"].value)
+    if ex is not None:
+        E_loc = e.n_experts // ex.size
+        r = jax.lax.axis_index(ex.axis)
+        h_loc = jax.lax.dynamic_slice_in_dim(h, r * E_loc, E_loc, axis=0)
+        g = jnp.einsum("ecd,edf->ecf", h_loc, params["w_gate"].value)
+        u = jnp.einsum("ecd,edf->ecf", h_loc, params["w_up"].value)
+        g = tp_probe("moe_hidden", g)
+        out_loc = jnp.einsum("ecf,efd->ecd", act(g) * u,
+                             params["w_down"].value)
+        out = tp_g(ex.axis, jax.lax.dynamic_update_slice(
+            jnp.zeros((e.n_experts, C, D), out_loc.dtype), out_loc,
+            (r * E_loc, 0, 0)))
+    else:
+        g = jnp.einsum("ecd,edf->ecf", h, params["w_gate"].value)
+        u = jnp.einsum("ecd,edf->ecf", h, params["w_up"].value)
+        g = tp_probe("moe_hidden", g)
+        out = jnp.einsum("ecf,efd->ecd", act(g) * u, params["w_down"].value)
+        if ff_col is not None:       # row-parallel w_down: partial products
+            out = tp_g(ff_col.axis, out)
 
     # gather back and combine with routing weights (dropped -> 0).
     # The [T,k,D] intermediate stays in the input dtype; the weighted
@@ -129,6 +160,10 @@ def moe_forward(params: Params, x: jax.Array, cfg: ModelConfig,
 
     if "shared" in params:
         sh = params["shared"]
-        hs = act(dense(sh["gate"], xt)) * dense(sh["up"], xt)
+        xs = xt
+        col = local_dim(sh["gate"]["kernel"].axes[-1])
+        if col is not None:     # column-parallel shared expert, own f entry
+            xs = tp_f(col.axis, xs)
+        hs = act(dense(sh["gate"], xs)) * dense(sh["up"], xs)
         y = y + dense(sh["down"], hs).astype(jnp.float32)
     return MoEOut(y.astype(x.dtype).reshape(B, S, D), aux)

@@ -23,14 +23,16 @@ from repro.perf.costmodel.primitives import (COLLECTIVES, DEFAULT_LINK,
                                              collective_seconds,
                                              schedule_seconds)
 from repro.perf.costmodel.schedules import (ScheduleInputs, build_schedule,
-                                            describe_schedule, mesh_axes_for,
+                                            describe_schedule,
+                                            exposed_comm_seconds,
+                                            mesh_axes_for,
                                             strategy_comm_seconds)
 
 __all__ = [
     "COLLECTIVES", "DEFAULT_LINK", "DEFAULT_CALIBRATION",
     "Calibration", "CollectiveCall", "LinkParams", "ScheduleInputs",
     "build_schedule", "collective_seconds", "default_calibration_path",
-    "describe_schedule", "fit_calibration", "load_calibration",
-    "mesh_axes_for", "resimulate_rows", "schedule_seconds",
-    "strategy_comm_seconds",
+    "describe_schedule", "exposed_comm_seconds", "fit_calibration",
+    "load_calibration", "mesh_axes_for", "resimulate_rows",
+    "schedule_seconds", "strategy_comm_seconds",
 ]

@@ -46,11 +46,13 @@ from repro.perf.costmodel.primitives import (COLLECTIVES, DEFAULT_LINK,
 from repro.perf.costmodel.schedules import (ScheduleInputs, build_schedule,
                                             strategy_comm_seconds)
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2                 # v2 adds the per-strategy overlap map
+_ACCEPTED_VERSIONS = (1, 2)        # v1 artifacts load with overlap = None
 
 # log10 search bounds: α ∈ [10ns, 10ms] per hop, bw ∈ [100 KB/s, 10 TB/s].
 LOG_ALPHA_BOUNDS = (-8.0, -2.0)
 LOG_BW_BOUNDS = (5.0, 13.0)
+OVERLAP_BOUNDS = (0.0, 1.0)        # ρ: fraction of compute that hides comm
 
 ENV_VAR = "REPRO_CALIBRATION"      # path override; "" / "none" = defaults
 
@@ -70,16 +72,31 @@ class Calibration:
 
     ``label`` flows into sweep rows (the ``calibration`` column) so every
     simulated number is traceable to the link that produced it.
+
+    ``overlap`` (schema v2) maps strategy name → fitted overlap factor
+    ρ ∈ [0, 1]: the fraction of a row's compute time that hides
+    communication in the overlap train step (exposed comm =
+    max(0, comm − ρ·compute), ``schedules.exposed_comm_seconds``).
+    ``None``/absent strategies price fully serialized (ρ = 0), which is
+    exactly the v1 behaviour — old artifacts stay loadable.
     """
     label: str = "default"
     default: LinkParams = DEFAULT_LINK
     per_collective: Optional[Mapping[str, LinkParams]] = None
+    overlap: Optional[Mapping[str, float]] = None
     meta: Mapping[str, object] = field(default_factory=dict)
 
     def links(self) -> Links:
         if not self.per_collective:
             return self.default
         return {**dict(self.per_collective), "default": self.default}
+
+    def overlap_for(self, strategy) -> float:
+        """Fitted ρ of ``strategy`` (0.0 when unfitted: fully exposed)."""
+        if not self.overlap:
+            return 0.0
+        name = getattr(strategy, "name", strategy)
+        return float(self.overlap.get(str(name), 0.0))
 
     def to_dict(self) -> Dict:
         return {"version": SCHEMA_VERSION, "label": self.label,
@@ -88,19 +105,26 @@ class Calibration:
                     None if not self.per_collective else
                     {k: v.to_dict()
                      for k, v in self.per_collective.items()}),
+                "overlap": (None if not self.overlap
+                            else {k: float(v)
+                                  for k, v in self.overlap.items()}),
                 "meta": dict(self.meta)}
 
     @classmethod
     def from_dict(cls, d: Mapping) -> "Calibration":
-        if int(d.get("version", 0)) != SCHEMA_VERSION:
+        if int(d.get("version", 0)) not in _ACCEPTED_VERSIONS:
             raise ValueError(f"unsupported calibration schema version "
-                             f"{d.get('version')!r} (want {SCHEMA_VERSION})")
+                             f"{d.get('version')!r} "
+                             f"(accept {_ACCEPTED_VERSIONS})")
         pc = d.get("per_collective") or None
+        ov = d.get("overlap") or None
         return cls(label=str(d.get("label", "fitted")),
                    default=LinkParams.from_dict(d["default"]),
                    per_collective=(None if pc is None else
                                    {k: LinkParams.from_dict(v)
                                     for k, v in pc.items()}),
+                   overlap=(None if ov is None else
+                            {k: float(v) for k, v in ov.items()}),
                    meta=dict(d.get("meta", {})))
 
     def save(self, path: str) -> None:
@@ -243,6 +267,69 @@ def _fit_links(H: np.ndarray, V: np.ndarray, y: np.ndarray,
     return links, float(best.fun)
 
 
+def overlap_matrices(rows: Sequence[Mapping]
+                     ) -> Tuple[np.ndarray, np.ndarray, List[str]]:
+    """(compute_s, S, strategies) for the joint overlap fit.
+
+    ``compute_s[r]`` is row r's measured single-device compute seconds
+    (the quantity ρ scales); ``S[r, j]`` one-hot selects the row's
+    strategy so the DE fits one ρ per strategy present in the data.
+    """
+    strategies = sorted({str(r["features"]["strategy"]) for r in rows})
+    c = np.array([float(r["measured_ms"]) * 1e-3 for r in rows])
+    S = np.zeros((len(rows), len(strategies)))
+    for i, r in enumerate(rows):
+        S[i, strategies.index(str(r["features"]["strategy"]))] = 1.0
+    return c, S, strategies
+
+
+def _fit_links_overlap(H: np.ndarray, V: np.ndarray, y: np.ndarray,
+                       kinds: Sequence[str], compute: np.ndarray,
+                       strat_onehot: np.ndarray, strategies: Sequence[str],
+                       *, seeds: Sequence[int], maxiter: int
+                       ) -> Tuple[Dict[str, LinkParams], Dict[str, float],
+                                  float]:
+    """Joint DE over link params of ``kinds`` plus one ρ per strategy.
+
+    The residual model becomes the *exposed* communication
+    ``relu(H@α + V@(1/bw) − (S@ρ)·compute)`` — what the overlap train
+    step leaves on the wall clock — so the link and the overlap factors
+    are fitted against each other instead of ρ absorbing link error.
+    """
+    import jax.numpy as jnp
+
+    from repro.core.de import de_multi_seed
+
+    idx = [COLLECTIVES.index(k) for k in kinds]
+    Hj = jnp.asarray(H[:, idx], jnp.float32)
+    Vj = jnp.asarray(V[:, idx], jnp.float32)
+    yj = jnp.asarray(y, jnp.float32)
+    cj = jnp.asarray(compute, jnp.float32)
+    Sj = jnp.asarray(strat_onehot, jnp.float32)
+    m, p = len(kinds), len(strategies)
+
+    def cost(x):
+        alphas = 10.0 ** x[:m]
+        inv_bw = 10.0 ** (-x[m:2 * m])
+        rho = x[2 * m:]
+        comm = Hj @ alphas + Vj @ inv_bw
+        pred = jnp.maximum(comm - (Sj @ rho) * cj, 0.0)
+        return jnp.mean(jnp.abs(pred - yj))
+
+    lo = np.array([LOG_ALPHA_BOUNDS[0]] * m + [LOG_BW_BOUNDS[0]] * m
+                  + [OVERLAP_BOUNDS[0]] * p)
+    hi = np.array([LOG_ALPHA_BOUNDS[1]] * m + [LOG_BW_BOUNDS[1]] * m
+                  + [OVERLAP_BOUNDS[1]] * p)
+    results = de_multi_seed(cost, (lo, hi), seeds, maxiter=maxiter)
+    best = min(results, key=lambda r: float(r.fun))
+    x = np.asarray(best.x, float)
+    links = {k: LinkParams(alpha_s=float(10.0 ** x[j]),
+                           bw_bytes_per_s=float(10.0 ** x[m + j]))
+             for j, k in enumerate(kinds)}
+    rho = {s: float(x[2 * m + j]) for j, s in enumerate(strategies)}
+    return links, rho, float(best.fun)
+
+
 def _mae_from_matrices(H: np.ndarray, V: np.ndarray, y: np.ndarray,
                        links: Links) -> float:
     """MAE of ``links`` priced directly on the coefficient matrices —
@@ -264,6 +351,7 @@ def dataset_mae_s(rows: Sequence[Mapping], links: Links) -> float:
 
 def fit_calibration(rows: Sequence[Mapping], *,
                     per_collective: bool = False,
+                    overlap: bool = False,
                     seeds: Sequence[int] = (0, 1, 2),
                     maxiter: int = 200,
                     label: Optional[str] = None,
@@ -272,8 +360,11 @@ def fit_calibration(rows: Sequence[Mapping], *,
 
     Always fits one shared link; with ``per_collective=True`` each
     collective kind present in the data additionally gets its own link
-    (absent kinds fall back to the shared fit). Raises if no row
-    constrains the link (no sharded measurements above one device).
+    (absent kinds fall back to the shared fit). With ``overlap=True`` a
+    per-strategy overlap factor ρ is fitted *jointly* with the link(s):
+    the residual model becomes the exposed communication
+    ``max(0, comm − ρ·compute)`` of the overlap train step. Raises if no
+    row constrains the link (no sharded measurements above one device).
     """
     ok = calibration_rows(rows)
     if not ok:
@@ -283,22 +374,39 @@ def fit_calibration(rows: Sequence[Mapping], *,
     link, shared_mae = _fit_shared(H, V, y, seeds=seeds, maxiter=maxiter)
     pc: Optional[Dict[str, LinkParams]] = None
     mae = shared_mae
+    present = [k for j, k in enumerate(COLLECTIVES)
+               if (H[:, j] > 0).any() or (V[:, j] > 0).any()]
     if per_collective:
-        present = [k for j, k in enumerate(COLLECTIVES)
-                   if (H[:, j] > 0).any() or (V[:, j] > 0).any()]
         pc, mae = _fit_links(H, V, y, present, seeds=seeds,
                              maxiter=maxiter)
+    rho: Optional[Dict[str, float]] = None
+    mae_serialized = mae
+    if overlap:
+        c, S, strategies = overlap_matrices(ok)
+        if per_collective:
+            pc, rho, mae = _fit_links_overlap(H, V, y, present, c, S,
+                                              strategies, seeds=seeds,
+                                              maxiter=maxiter)
+        else:
+            Hs = H.sum(axis=1, keepdims=True)
+            Vs = V.sum(axis=1, keepdims=True)
+            lks, rho, mae = _fit_links_overlap(Hs, Vs, y, [COLLECTIVES[0]],
+                                               c, S, strategies,
+                                               seeds=seeds, maxiter=maxiter)
+            link = lks[COLLECTIVES[0]]
     mae_default = _mae_from_matrices(H, V, y, DEFAULT_LINK)
-    meta = {"n_rows": len(ok), "source": source,
-            "mode": "per_collective" if per_collective else "global",
+    mode = "per_collective" if per_collective else "global"
+    if overlap:
+        mode += "+overlap"
+    meta = {"n_rows": len(ok), "source": source, "mode": mode,
             "mae_ms_default": mae_default * 1e3,
             "mae_ms_shared": shared_mae * 1e3,
+            "mae_ms_serialized": mae_serialized * 1e3,
             "mae_ms_fitted": mae * 1e3,
             "seeds": list(seeds), "maxiter": int(maxiter)}
     return Calibration(
-        label=label or ("fitted:per-collective" if per_collective
-                        else "fitted:global"),
-        default=link, per_collective=pc, meta=meta)
+        label=label or ("fitted:" + mode.replace("_", "-")),
+        default=link, per_collective=pc, overlap=rho, meta=meta)
 
 
 def _fit_shared(H, V, y, *, seeds, maxiter) -> Tuple[LinkParams, float]:
@@ -317,18 +425,21 @@ def _fit_shared(H, V, y, *, seeds, maxiter) -> Tuple[LinkParams, float]:
 
 def fit_family_calibrations(rows_by_family: Mapping[str, Sequence[Mapping]],
                             *, per_collective: bool = False,
+                            overlap: bool = False,
                             seeds: Sequence[int] = (0, 1, 2),
                             maxiter: int = 200,
                             source: str = "") -> Dict[str, Calibration]:
     """One fitted Calibration per architecture family (labels
     ``fitted:<family>``). Families whose rows cannot constrain a link
     (no multi-device sharded measurements) are silently absent — the
-    transfer matrix then simply has no row for them."""
+    transfer matrix then simply has no row for them. ``overlap=True``
+    jointly fits each family's per-strategy ρ (see ``fit_calibration``)."""
     out: Dict[str, Calibration] = {}
     for family, rows in rows_by_family.items():
         if not calibration_rows(rows):
             continue
         out[family] = fit_calibration(rows, per_collective=per_collective,
+                                      overlap=overlap,
                                       seeds=seeds, maxiter=maxiter,
                                       label=f"fitted:{family}",
                                       source=source or family)
@@ -369,6 +480,10 @@ def resimulate_rows(rows: Sequence[Mapping],
     row's own schedule inputs; measured columns and features are
     untouched, so the result feeds the same fit/report pipeline as the
     original rows (``calibration`` column records the link's label).
+    When the calibration carries fitted overlap factors, ``t_simulated``
+    adds only the *exposed* communication max(0, comm − ρ·compute) —
+    the full schedule price stays in ``comm_ms`` and the exposed part
+    lands in ``exposed_comm_ms``.
     """
     out: List[Dict] = []
     links = calibration.links()
@@ -376,10 +491,14 @@ def resimulate_rows(rows: Sequence[Mapping],
         if "error" in r:
             out.append(dict(r))
             continue
-        comm_ms = strategy_comm_seconds(r["features"]["strategy"],
-                                        row_inputs(r), links) * 1e3
-        t_sim = float(r["measured_ms"]) + comm_ms
-        out.append({**r, "comm_ms": comm_ms, "t_simulated": t_sim,
+        strategy = r["features"]["strategy"]
+        comm_ms = strategy_comm_seconds(strategy, row_inputs(r),
+                                        links) * 1e3
+        rho = calibration.overlap_for(strategy)
+        exposed_ms = max(0.0, comm_ms - rho * float(r["measured_ms"]))
+        t_sim = float(r["measured_ms"]) + exposed_ms
+        out.append({**r, "comm_ms": comm_ms, "exposed_comm_ms": exposed_ms,
+                    "overlap": rho, "t_simulated": t_sim,
                     "time_ms": t_sim, "calibration": calibration.label})
     return out
 
@@ -399,6 +518,9 @@ def build_parser() -> argparse.ArgumentParser:
                     help="calibration JSON artifact to write")
     ap.add_argument("--per-collective", action="store_true",
                     help="fit one link per collective kind")
+    ap.add_argument("--overlap", action="store_true",
+                    help="jointly fit per-strategy overlap factors ρ "
+                         "(exposed comm = max(0, comm − ρ·compute))")
     ap.add_argument("--seeds", type=int, default=3)
     ap.add_argument("--maxiter", type=int, default=200)
     ap.add_argument("--dry-run", action="store_true",
@@ -410,6 +532,7 @@ def main(argv=None):
     args = build_parser().parse_args(argv)
     plan = {"rows": args.rows, "out": args.out,
             "per_collective": bool(args.per_collective),
+            "overlap": bool(args.overlap),
             "seeds": args.seeds, "maxiter": args.maxiter}
     print(json.dumps({"calibrate_plan": plan}), flush=True)
     if args.dry_run:
@@ -418,6 +541,7 @@ def main(argv=None):
     with open(args.rows) as f:
         rows = json.load(f)
     cal = fit_calibration(rows, per_collective=args.per_collective,
+                          overlap=args.overlap,
                           seeds=tuple(range(args.seeds)),
                           maxiter=args.maxiter,
                           source=os.path.relpath(args.rows))

@@ -119,6 +119,28 @@ def strategy_comm_seconds(strategy: Union[str, object], inp: ScheduleInputs,
     return schedule_seconds(build_schedule(strategy, inp, axes=axes), links)
 
 
+def exposed_comm_seconds(strategy: Union[str, object], inp: ScheduleInputs,
+                         links: Links = DEFAULT_LINK, *,
+                         compute_seconds: float = 0.0,
+                         overlap: float = 0.0,
+                         axes: Union[Dict[str, int], None] = None) -> float:
+    """Communication left *exposed* after overlapping with compute.
+
+    The overlap train step interleaves streamed parameter gathers and
+    fused gradient reduce-scatters with per-layer compute, so a fraction
+    of the schedule's wall-clock hides behind the math. The fitted
+    per-strategy overlap factor ``overlap`` (ρ ∈ [0, 1], from
+    ``Calibration.overlap_for``) prices that as
+
+        exposed = max(0, comm − ρ·compute)
+
+    ρ=0 degrades to the fully-serialized legacy schedule; ρ=1 means up
+    to one full compute time of communication hides completely.
+    """
+    comm = strategy_comm_seconds(strategy, inp, links, axes=axes)
+    return max(0.0, comm - float(overlap) * float(compute_seconds))
+
+
 def describe_schedule(strategy: Union[str, object],
                       inp: ScheduleInputs,
                       links: Links = DEFAULT_LINK,

@@ -14,12 +14,15 @@ letting it extrapolate the device axis:
   placeholder pool timeshares the host cores, so device computations
   serialize instead of overlapping (docs/METHODOLOGY.md); ``k`` (the
   effective parallel width) is *fitted* from the measured rows, not
-  assumed. This also prices tp correctly: its batch is replicated over
-  the model axis, so every device computes the full batch;
+  assumed. Since the overlap step partitions tensor-parallel compute,
+  a tp-family device touches ~1/|model| of the per-layer FLOPs, so the
+  per-device sub-batch divides by *all* devices for every strategy;
 * ``t_comm`` — the strategy's collective schedule (``repro.perf.
   costmodel``) priced by a planner-fit link calibrated on the residual
   *after* oversubscription — reusing the shared link would double-count
-  the serialization the global calibration absorbed into α/bw.
+  the serialization the global calibration absorbed into α/bw. Only the
+  *exposed* part ``max(0, comm − ρ·compute)`` lands on the clock; the
+  per-strategy overlap factor ρ is fitted jointly with the link.
 
 Keeping the terms separate is what lets ``report.py`` say *which term
 dominates* each recommendation, and the uncertainty band is the honest
@@ -33,6 +36,7 @@ batch.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 from dataclasses import dataclass, field
@@ -151,12 +155,16 @@ class PlannerModel:
 # ---------------------------------------------------------------------------
 
 def _sub_batch(strategy: str, n_devices: int, batch: int) -> int:
-    """Per-device batch: the global batch shards over the strategy's
-    data axis only (tp replicates it over model — every device computes
-    the full batch, exactly like the measured path)."""
-    from repro.perf.costmodel import mesh_axes_for
-    data = mesh_axes_for(strategy, n_devices).get("data", 1)
-    return max(batch // max(data, 1), 1)
+    """Per-device compute-equivalent batch: divides by *all* devices.
+
+    The batch itself shards only over the data axis, but the overlap
+    step partitions tensor-parallel compute Megatron-style, so a model
+    rank performs ~1/|model| of the per-layer FLOPs on its (replicated)
+    batch slice. batch/(data·model) = batch/n is the compute-equivalent
+    sub-batch the fitted single-device model is queried at — for
+    dp/fsdp (model = 1) this is the plain per-device batch, exactly as
+    before."""
+    return max(batch // max(n_devices, 1), 1)
 
 
 def _compute_samples(feature_rows: Sequence[Mapping]) -> List[Dict]:
@@ -189,29 +197,48 @@ def _ref_work_scale(spec_tag: str,
 
 def _predict_step_ms(model: "PlannerModel",
                      feature_rows: Sequence[Mapping],
-                     comm_step_ms: np.ndarray
-                     ) -> Tuple[np.ndarray, np.ndarray]:
-    """(compute_step_ms, total_step_ms) per feature row, vectorized."""
+                     comm_step_ms: np.ndarray,
+                     strategies: Optional[Sequence[str]] = None
+                     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """(compute_step_ms, total_step_ms, exposed_comm_ms) per feature row.
+
+    Only the exposed communication ``max(0, comm − ρ·compute)`` enters
+    the total; ρ comes from the planner calibration's fitted overlap
+    map (0 when unfitted, restoring the fully-serialized sum).
+    ``strategies`` defaults to each row's own ``strategy`` feature.
+    """
     samples = _compute_samples(feature_rows)
     comp_fw_sub = np.asarray(predict_samples(model.compute, samples), float)
     over = np.array([model.oversub(int(f["n_devices"]))
                      for f in feature_rows])
     comp_step = comp_fw_sub * _ref_work_scale(model.spec_tag, samples) * over
-    return comp_step, comp_step + np.asarray(comm_step_ms, float)
+    if strategies is None:
+        strategies = [f.get("strategy") for f in feature_rows]
+    rho = np.array([0.0 if s is None else model.calibration.overlap_for(s)
+                    for s in strategies])
+    exposed = np.maximum(np.asarray(comm_step_ms, float) - rho * comp_step,
+                         0.0)
+    return comp_step, comp_step + exposed, exposed
 
 
 def _fit_decomposition(rows: Sequence[Mapping], *,
                        seeds: Sequence[int], maxiter: int
                        ) -> Tuple[float, Calibration, Dict]:
-    """Fit (oversub_k, planner link) on the measured rows.
+    """Fit (oversub_k, planner link, overlap ρ) on the measured rows.
 
     For each candidate width the residual after oversubscribed compute,
     ``t_measured − measured_ms · max(1, n/k)``, is fitted by one shared
-    ring link (same DE machinery as the global calibration); the
-    (k, link) pair with the lowest MAE wins.
+    ring link plus a per-strategy overlap factor ρ that lets up to
+    ``ρ·compute`` of the schedule hide behind the overlapped step
+    (same DE machinery as the global calibration); the lowest-MAE
+    (k, link, ρ) triple wins. ρ multiplies the *oversubscribed* compute
+    because that is the wall-clock the streamed gathers actually run
+    alongside on the timeshared pool.
     """
-    from repro.perf.costmodel.calibrate import (calibration_rows,
-                                                residual_matrices, _fit_links)
+    from repro.perf.costmodel.calibrate import (_fit_links_overlap,
+                                                calibration_rows,
+                                                overlap_matrices,
+                                                residual_matrices)
     from repro.perf.costmodel.primitives import COLLECTIVES
 
     ok = calibration_rows(rows)
@@ -221,28 +248,33 @@ def _fit_decomposition(rows: Sequence[Mapping], *,
                          "measured_sweep` first")
     H, V, _ = residual_matrices(ok)
     Hs, Vs = H.sum(1, keepdims=True), V.sum(1, keepdims=True)
+    _, S, strategies = overlap_matrices(ok)
     meas = np.array([r["t_measured_sharded"] for r in ok]) * 1e-3
     comp = np.array([r["measured_ms"] for r in ok]) * 1e-3
     n = np.array([int(r["features"]["n_devices"]) for r in ok], float)
 
     # relative objective: dividing each row's coefficients and residual
-    # by its measured time keeps the problem linear in (α, 1/bw) while
-    # the DE cost becomes mean |relative error| — the statistic the
-    # planner reports — instead of letting the slowest rows dominate.
+    # by its measured time keeps the problem linear in (α, 1/bw, ρ)
+    # while the DE cost becomes mean |relative error| — the statistic
+    # the planner reports — instead of letting the slowest rows
+    # dominate. relu(w·z) = w·relu(z) for w > 0, so scaling the
+    # exposed-comm hinge by w preserves the relative objective.
     w = 1.0 / np.maximum(meas, 1e-9)
     best = None
     for k in OVERSUB_GRID:
-        y = (meas - comp * np.maximum(1.0, n / k)) * w
-        links, rel_mae = _fit_links(Hs * w[:, None], Vs * w[:, None], y,
-                                    [COLLECTIVES[0]],
-                                    seeds=seeds, maxiter=maxiter)
+        comp_over = comp * np.maximum(1.0, n / k)
+        y = (meas - comp_over) * w
+        links, rho, rel_mae = _fit_links_overlap(
+            Hs * w[:, None], Vs * w[:, None], y, [COLLECTIVES[0]],
+            comp_over * w, S, strategies, seeds=seeds, maxiter=maxiter)
         if best is None or rel_mae < best[0]:
-            best = (rel_mae, k, links[COLLECTIVES[0]])
-    rel_mae, k, link = best
+            best = (rel_mae, k, links[COLLECTIVES[0]], rho)
+    rel_mae, k, link, rho = best
     meta = {"n_rows": len(ok), "oversub_grid": list(OVERSUB_GRID),
-            "objective": "relative", "rel_mae_fitted": rel_mae}
-    cal = Calibration(label=f"planner:oversub-k={k:g}", default=link,
-                      meta=meta)
+            "objective": "relative", "rel_mae_fitted": rel_mae,
+            "overlap": dict(rho)}
+    cal = Calibration(label=f"planner:oversub-k={k:g}+overlap",
+                      default=link, overlap=dict(rho), meta=meta)
     return k, cal, meta
 
 
@@ -260,7 +292,7 @@ def evaluate_on_rows(model: "PlannerModel",
     comm = np.array([strategy_comm_seconds(r["features"]["strategy"],
                                            row_inputs(r), links) * 1e3
                      for r in ok])
-    _, pred = _predict_step_ms(model, [r["features"] for r in ok], comm)
+    _, pred, _ = _predict_step_ms(model, [r["features"] for r in ok], comm)
     meas = np.array([r["t_measured_sharded"] for r in ok])
     rel = (pred - meas) / np.maximum(np.abs(meas), 1e-9)
     return {"n": len(ok), "mape": float(np.mean(np.abs(rel))),
@@ -341,9 +373,10 @@ class Prediction:
 
 
 def _dominant_term(compute_ms: float, comm: CommEstimate,
-                   scale: float) -> str:
-    comm_ms = comm.seconds * 1e3 * scale
-    if comm_ms <= compute_ms or not comm.schedule:
+                   exposed_ms: float) -> str:
+    """Compare compute against the *exposed* comm — hidden comm can't
+    dominate a recommendation no matter how large the raw schedule is."""
+    if exposed_ms <= compute_ms or not comm.schedule:
         return "compute"
     top = max(comm.schedule, key=lambda c: c["ms"])
     return f"comm:{top['op']}@{top['axis']}"
@@ -376,7 +409,9 @@ def predict_points(model: PlannerModel,
             act_bytes=point.act_bytes(),
             calibration=model.calibration, detail=True))
     comm_step = np.array([c.seconds * 1e3 for c in comms])
-    comp_step, total_step = _predict_step_ms(model, feature_rows, comm_step)
+    comp_step, total_step, exposed_step = _predict_step_ms(
+        model, feature_rows, comm_step,
+        strategies=[p.strategy for p, _ in points])
     scales = 1.0 / _ref_work_scale(model.spec_tag, feature_rows)
     ref_units = REF_TOKENS if aspec.norm_unit == "token" else REF_SAMPLES
 
@@ -387,10 +422,14 @@ def predict_points(model: PlannerModel,
         step_ms = max(float(total_step[i]), 1e-9)
         time_ms = step_ms * scale
         throughput = ref_units / (time_ms * 1e-3)
+        comm = dataclasses.replace(
+            comms[i],
+            overlap=model.calibration.overlap_for(point.strategy),
+            exposed_seconds=float(exposed_step[i]) * 1e-3)
         out.append(Prediction(
             point=point, feasibility=feas,
             compute_ms=float(comp_step[i]) * scale,
-            comm_ms=float(comm_step[i]) * scale,
+            comm_ms=float(exposed_step[i]) * scale,
             time_ms=time_ms,
             lo_ms=max(time_ms * (1.0 - band), 0.0),
             hi_ms=time_ms * (1.0 + band),
@@ -399,7 +438,7 @@ def predict_points(model: PlannerModel,
             efficiency_sps_per_device=throughput / point.n_devices,
             device_seconds=time_ms * 1e-3 * point.n_devices,
             mem_headroom_bytes=feas.mem_headroom_bytes,
-            dominant_term=_dominant_term(float(comp_step[i]), comms[i],
-                                         1.0),
-            comm=comms[i]))
+            dominant_term=_dominant_term(float(comp_step[i]), comm,
+                                         float(exposed_step[i])),
+            comm=comm))
     return out

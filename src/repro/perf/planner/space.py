@@ -19,11 +19,15 @@ Two layers:
 
 Memory model (per device, fp32): persistent parameter shard + optimizer
 copies of it + the activation working set of the per-device sub-batch,
-plus the two transient terms the current shard_map body really
-materializes — the in-body all-gather of the full parameter tree and
-the full-size gradient tree. ZeRO-style strategies therefore save
-persistent (param/opt) bytes but not the transient gather, exactly like
-the executable path (docs/PLANNER.md).
+plus the transient terms the shard_map body really materializes — the
+gather footprint and the full-size gradient tree. The overlap step
+streams per-layer parameter gathers inside the layer scan, so the
+gather term charges eagerly-gathered leaves plus the largest
+single-layer streamed chunk (``repro.train.step.
+overlap_transient_bytes``), not the whole tree; partitioned
+tensor-parallel slices are never gathered at all. ZeRO-style strategies
+therefore keep most of their persistent savings at step time too
+(docs/PLANNER.md).
 """
 from __future__ import annotations
 
@@ -118,6 +122,11 @@ class MemoryEstimate:
     params_per_device_bytes: int
     opt_copies: float
     act_per_device_bytes: int
+    # Transient gather term of the *overlap* body when the pricing knows
+    # it (eager whole-array gathers + the largest single-layer streamed
+    # chunk — ``repro.train.step.overlap_transient_bytes``); None falls
+    # back to the legacy full-tree gather.
+    gather_transient_bytes: Optional[int] = None
 
     @property
     def opt_per_device_bytes(self) -> int:
@@ -125,8 +134,13 @@ class MemoryEstimate:
 
     @property
     def gather_per_device_bytes(self) -> int:
-        """Transient full-parameter copy the shard_map body all-gathers
-        (zero under dp, where params are already full per device)."""
+        """Transient parameter-gather bytes the shard_map body
+        materializes beyond the persistent shards (zero under dp, where
+        params are already full per device). The overlap step streams
+        per-layer gathers inside the scan, so streamed strategies charge
+        eager leaves plus one layer's chunk — not the whole tree."""
+        if self.gather_transient_bytes is not None:
+            return self.gather_transient_bytes
         return self.params_full_bytes - self.params_per_device_bytes
 
     @property
@@ -156,14 +170,17 @@ class MemoryEstimate:
 
 def estimate_memory(params, mesh: MeshLike, strategy: Union[str, object],
                     *, opt_copies: float, act_per_device_bytes: int = 0,
-                    pspecs=None) -> MemoryEstimate:
+                    pspecs=None,
+                    gather_transient_bytes: Optional[int] = None
+                    ) -> MemoryEstimate:
     """MemoryEstimate of any Param tree (arrays or eval_shape skeletons)
     under a mesh/strategy — registry rules unless ``pspecs`` is given."""
     full, shard = tree_shard_bytes(params, mesh, strategy, pspecs=pspecs)
     return MemoryEstimate(params_full_bytes=full,
                           params_per_device_bytes=shard,
                           opt_copies=opt_copies,
-                          act_per_device_bytes=act_per_device_bytes)
+                          act_per_device_bytes=act_per_device_bytes,
+                          gather_transient_bytes=gather_transient_bytes)
 
 
 def model_comm_sizes(cfg, batch: int, seq: int,
@@ -268,21 +285,33 @@ def lenet_memory(cfg: LeNet5Config,
                  mesh_axes: Optional[Mapping[str, int]] = None,
                  skeleton=None) -> MemoryEstimate:
     """Per-device memory of one LeNet launch point, priced against the
-    *same* positional PartitionSpecs the measured shard_map path shards
-    with (``repro.perf.sweep._strategy_pspecs``)."""
-    from repro.perf.sweep import _strategy_pspecs
+    *same* entry/gather PartitionSpecs the measured shard_map path
+    shards with (``repro.perf.sweep.lenet_partition_specs``):
+    partitioned fc1/fc2 slices stay local and are never gathered, so
+    they drop out of the transient gather term."""
+    from repro.perf.sweep import lenet_partition_specs
 
     axes = dict(mesh_axes if mesh_axes is not None
                 else mesh_axes_for(cfg.strategy, cfg.n_devices))
     if skeleton is None:
         skeleton = lenet_param_skeleton(cfg)
-    pspecs = _strategy_pspecs(skeleton, cfg.strategy, axes)
+    entry_specs, gather_specs, part_axes = lenet_partition_specs(
+        cfg, skeleton, axes)
+    gather_transient = 0
+    for k, p in skeleton.items():
+        b = _leaf_bytes(p)
+        entry_div = shard_divisor(entry_specs[k], axes)
+        gather_div = shard_divisor(gather_specs[k], axes)
+        # In-body size: the entry shard with its gathered dims restored
+        # (partitioned dims stay local, so their leaves add nothing).
+        gather_transient += b // (entry_div // gather_div) - b // entry_div
     data = axes.get("data", 1)
     per_dev_batch = max(cfg.batch_size // max(data, 1), 1)
     return estimate_memory(
-        skeleton, axes, cfg.strategy, pspecs=pspecs,
+        skeleton, axes, cfg.strategy, pspecs=entry_specs,
         opt_copies=OPT_STATE_COPIES.get(cfg.optimizer, 2.0),
-        act_per_device_bytes=per_dev_batch * lenet_act_sample_bytes(cfg))
+        act_per_device_bytes=per_dev_batch * lenet_act_sample_bytes(cfg),
+        gather_transient_bytes=gather_transient)
 
 
 def check_feasible(cfg: LeNet5Config, *, pool: int,
@@ -418,6 +447,43 @@ class ArchLaunchPoint:
         return self.cfg.ssm.d_state if self.cfg.ssm else 0
 
 
+# (cfg, strategy, mesh) → overlap transient bytes; deriving them traces
+# the model init twice, and the enumeration grid revisits the same
+# (strategy, n_devices) cell for every batch/compression combination.
+_TRANSIENT_CACHE: Dict[Tuple, int] = {}
+
+
+def _model_gather_transient(cfg, strat_name: str,
+                            axes: Mapping[str, int],
+                            optimizer: str) -> Optional[int]:
+    """Transient gather bytes of the overlap train step for one launch
+    cell, from the step's own leaf plans (eager gathers + the largest
+    single-layer streamed chunk). None when the pricing cannot run
+    (unhashable config, trace failure) — callers then fall back to the
+    legacy full-tree transient."""
+    from repro.configs.base import TrainConfig
+    from repro.train.step import overlap_transient_bytes
+
+    try:
+        key = (cfg, strat_name, tuple(sorted(axes.items())), optimizer)
+        if key in _TRANSIENT_CACHE:
+            return _TRANSIENT_CACHE[key]
+    except TypeError:
+        key = None
+    try:
+        tcfg = TrainConfig(optimizer=optimizer if optimizer in
+                           LM_OPT_STATE_COPIES else "sgd",
+                           grad_compression="none", remat_policy="none")
+        eager, chunk = overlap_transient_bytes(cfg, tcfg, dict(axes),
+                                               strat_name)
+        out = int(eager + chunk)
+    except Exception:
+        return None
+    if key is not None:
+        _TRANSIENT_CACHE[key] = out
+    return out
+
+
 def model_memory(cfg, strategy: Union[str, object], n_devices: int, *,
                  batch_size: int, seq_len: int, optimizer: str = "sgd",
                  skeleton=None) -> MemoryEstimate:
@@ -425,13 +491,15 @@ def model_memory(cfg, strategy: Union[str, object], n_devices: int, *,
     registry's own PartitionSpec resolution (``param_pspecs`` via
     ``tree_shard_bytes`` — the parity tests pin this leaf-for-leaf).
     Activations are the tp block-boundary tensors of the per-device
-    sub-batch (matching ``model_comm_sizes``)."""
+    sub-batch (matching ``model_comm_sizes``); the transient gather term
+    is the overlap step's streaming footprint, not the full tree."""
     import jax
 
     from repro.models import model as MD
     from repro.perf.sweep import arch_mesh_axes
 
-    axes = arch_mesh_axes(resolve_strategy(strategy).name, n_devices)
+    strat_name = resolve_strategy(strategy).name
+    axes = arch_mesh_axes(strat_name, n_devices)
     if skeleton is None:
         skeleton = jax.eval_shape(
             lambda: MD.init_model(jax.random.PRNGKey(0), cfg))
@@ -440,7 +508,9 @@ def model_memory(cfg, strategy: Union[str, object], n_devices: int, *,
     return estimate_memory(
         skeleton, axes, strategy,
         opt_copies=LM_OPT_STATE_COPIES.get(optimizer, 2.0),
-        act_per_device_bytes=act)
+        act_per_device_bytes=act,
+        gather_transient_bytes=_model_gather_transient(
+            cfg, strat_name, axes, optimizer))
 
 
 def estimate_memory_for(cfg, strategy: Union[str, object], n_devices: int,

@@ -51,7 +51,13 @@ def predict_samples(model: PerfModel, samples: Sequence[Dict],
 
 @dataclass(frozen=True)
 class CommEstimate:
-    """One strategy's schedule-priced collective cost, with provenance."""
+    """One strategy's schedule-priced collective cost, with provenance.
+
+    ``seconds`` is the full serialized schedule price; ``exposed_seconds``
+    subtracts what the overlap train step hides behind compute
+    (``max(0, comm − ρ·compute)`` with the calibration's fitted ρ) — it
+    equals ``seconds`` when no overlap factor or compute time is known.
+    """
     strategy: str
     n_devices: int
     mesh_axes: Dict[str, int]
@@ -61,6 +67,13 @@ class CommEstimate:
     seconds: float
     calibration_label: str
     schedule: Optional[Tuple[Dict, ...]] = None   # per-call breakdown
+    overlap: float = 0.0                          # fitted ρ for the strategy
+    exposed_seconds: Optional[float] = None
+
+    @property
+    def exposed(self) -> float:
+        return (self.seconds if self.exposed_seconds is None
+                else self.exposed_seconds)
 
     @property
     def calibrated(self) -> bool:
@@ -75,6 +88,8 @@ class CommEstimate:
                "param_bytes": self.param_bytes,
                "act_bytes": self.act_bytes, "wire_bits": self.wire_bits,
                "per_step_ms": self.seconds * 1e3,
+               "overlap": self.overlap,
+               "exposed_ms": self.exposed * 1e3,
                "calibration": self.calibration_label,
                "calibrated": self.calibrated}
         if self.schedule is not None:
@@ -84,6 +99,7 @@ class CommEstimate:
 
 def estimate_comm(strategy: str, n_devices: int, param_bytes: int, *,
                   wire_bits: int = 32, act_bytes: int = 0,
+                  compute_seconds: float = 0.0,
                   calibration: Optional[Calibration] = None,
                   detail: bool = False) -> CommEstimate:
     """Price one training iteration's collectives for ``strategy``.
@@ -91,7 +107,10 @@ def estimate_comm(strategy: str, n_devices: int, param_bytes: int, *,
     ``calibration=None`` resolves the shared calibration via
     ``load_calibration`` (checked-in artifact when present, documented
     defaults otherwise). ``detail=True`` additionally attaches the
-    per-collective breakdown (``describe_schedule``).
+    per-collective breakdown (``describe_schedule``). When the caller
+    knows the iteration's compute time, ``compute_seconds`` prices the
+    overlap: ``exposed_seconds = max(0, comm − ρ·compute)`` with the
+    calibration's fitted per-strategy ρ.
     """
     cal = calibration if calibration is not None else load_calibration()
     links = cal.links()
@@ -99,9 +118,12 @@ def estimate_comm(strategy: str, n_devices: int, param_bytes: int, *,
                          wire_bits=wire_bits, act_bytes=act_bytes)
     sched = (tuple(describe_schedule(strategy, inp, links))
              if detail else None)
+    seconds = strategy_comm_seconds(strategy, inp, links)
+    rho = cal.overlap_for(strategy)
+    exposed = max(0.0, seconds - rho * float(compute_seconds))
     return CommEstimate(
         strategy=strategy, n_devices=n_devices,
         mesh_axes=mesh_axes_for(strategy, n_devices),
         param_bytes=param_bytes, act_bytes=act_bytes, wire_bits=wire_bits,
-        seconds=strategy_comm_seconds(strategy, inp, links),
-        calibration_label=cal.label, schedule=sched)
+        seconds=seconds, calibration_label=cal.label, schedule=sched,
+        overlap=rho, exposed_seconds=exposed)

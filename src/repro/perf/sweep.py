@@ -17,11 +17,14 @@ every trial records *two* distributed iteration times side-by-side
   * ``t_measured_sharded`` — the wall-clock median of a *real*
     ``shard_map`` iteration over ``n_devices`` of the host device pool:
     the global batch is sharded over the data axis of the strategy's
-    mesh, parameter shards are all-gathered in-body, and the gradient
-    all-reduce-mean runs through the wire-compressed collective
-    (``repro.dist.compression.compressed_psum_mean``). The collectives
-    are real XLA collectives; on a CPU pool the devices timeshare cores,
-    which is exactly the measured-vs-simulated gap the fit reports.
+    mesh, tp-family meshes additionally *partition* the fc1/fc2 pair
+    Megatron-style over "model" (real activation all-reduces, compute
+    split m ways), remaining parameter shards are all-gathered in-body,
+    and the gradient all-reduce-mean runs through the wire-compressed
+    collective (``repro.dist.compression.compressed_psum_mean``). The
+    collectives are real XLA collectives; on a CPU pool the devices
+    timeshare cores, which is exactly the measured-vs-simulated gap the
+    fit reports.
 
 The paper's framework axis (TF/MXNet/PyTorch) maps to execution modes
 {jit, jit_donate, eager}.
@@ -199,6 +202,36 @@ def _strategy_pspecs(params, strategy: str, axes_sizes: Dict[str, int]):
     return jax.tree.map(one, params, is_leaf=is_param)
 
 
+def lenet_partition_specs(cfg: LeNet5Config, params,
+                          axes_sizes: Dict[str, int]):
+    """(entry_specs, gather_specs, part_axes): how the measured LeNet
+    body shards each leaf on shard_map entry, which of that sharding it
+    gathers back in-body, and the ``LocalDim``-marked axes of the
+    partitioned fc1/fc2 pair (empty when the mesh has no usable model
+    axis). Shared by the measured path and the planner's memory model,
+    so both always price the same layout."""
+    from repro.models.layers import LocalDim
+
+    m = axes_sizes.get("model", 1)
+    partition = (m > 1 and 120 % m == 0
+                 and cfg.strategy in ("tp", "fsdp_tp"))
+    # Base specs: the strategy's data-axis behaviour (tp is dp plus the
+    # model split; fsdp_tp is fsdp plus it). Partitioned leaves then
+    # shard over "model" on entry and are *not* gathered in-body.
+    analog = ({"tp": "dp", "fsdp_tp": "fsdp"}[cfg.strategy]
+              if partition else cfg.strategy)
+    gather_specs = dict(_strategy_pspecs(params, analog, axes_sizes))
+    entry_specs = dict(gather_specs)
+    part_axes: Dict[str, tuple] = {}
+    if partition:
+        col = LocalDim("mlp", "model", m)
+        entry_specs["fc1"] = P(None, "model")
+        entry_specs["fc2"] = P("model", None)
+        gather_specs["fc1"] = gather_specs["fc2"] = P()
+        part_axes = {"fc1": (None, col), "fc2": (col, None)}
+    return entry_specs, gather_specs, part_axes
+
+
 def make_sharded_iteration(cfg: LeNet5Config, mode: str, mesh: Mesh,
                            params):
     """One *real* distributed training iteration under ``shard_map``.
@@ -208,53 +241,66 @@ def make_sharded_iteration(cfg: LeNet5Config, mode: str, mesh: Mesh,
     the mesh has one (replicated over "model"), params enter sharded per
     ``_strategy_pspecs`` and are all-gathered in-body — the parameter
     traffic the fsdp-family schedules charge for — and gradients
-    all-reduce-mean through the compressed collective over *all* mesh
-    axes (the model-axis contributions are identical, so the mean is
-    exact); the optimizer then updates local shards.
+    all-reduce-mean through the compressed collective; the optimizer
+    then updates local shards.
 
-    NB the tp schedule (``STRATEGY_COLLECTIVES["tp"]``) describes
-    Megatron *activation* all-reduces, while this measured path — batch
-    replicated over "model", no in-block activation collectives — moves
-    model-axis parameter/gradient traffic instead; true tensor-parallel
-    compute partitioning in this body is the ROADMAP item that would
-    align the two, and until then tp calibration residuals price the
-    abstract schedule, not op-for-op traffic.
+    When the mesh has a model axis that divides the 120-wide fc hidden,
+    the fc1/fc2 pair is *partitioned* Megatron-style instead of
+    gathered: fc1 columns and fc2 rows stay local slices
+    (``LocalDim`` markers make ``lenet_forward`` run its manual tp path
+    — ``tp_f`` entry, partial fc2 product closed by ``tp_g``), so the
+    model axis now moves the schedule's *activation* all-reduces
+    op-for-op rather than proxy parameter traffic. Partitioned-leaf
+    gradients are complete per model rank and reduce over data axes
+    only (a pure tp mesh reduces nothing); replicated-leaf gradients
+    reduce over all axes (their model-axis contributions are identical
+    because ``tp_f``'s backward already completed the input cotangent,
+    so the mean stays exact).
     """
     from jax.experimental.shard_map import shard_map
-    from repro.models.layers import Param, is_param
+    from repro.models.layers import Param
 
     axes_sizes = dict(mesh.shape)
     axis_names = tuple(mesh.axis_names)
-    pspecs = _strategy_pspecs(params, cfg.strategy, axes_sizes)
+    entry_specs, gather_specs, part_axes = lenet_partition_specs(
+        cfg, params, axes_sizes)
     batch_spec = P("data") if "data" in axes_sizes else P()
+    data_axes = tuple(a for a in axis_names if a != "model")
 
     def body(params, batch, rng):
-        full = jax.tree.map(
-            lambda p, s: Param(gather_to_full(p.value, s), p.axes),
-            params, pspecs, is_leaf=is_param)
+        compute = {
+            k: (Param(p.value, part_axes[k]) if k in part_axes else
+                Param(gather_to_full(p.value, gather_specs[k]), p.axes))
+            for k, p in params.items()}
         loss, grads = jax.value_and_grad(
-            lambda p, b, r: lenet_loss(p, b, cfg, r))(full, batch, rng)
-        grads = jax.tree.map(
-            lambda g: compressed_psum_mean(g, axis_names, cfg.compression),
-            grads)
-        grads = jax.tree.map(
-            lambda g, s: Param(shard_of_full(g.value, s, mesh), g.axes),
-            grads, pspecs, is_leaf=is_param)
+            lambda p, b, r: lenet_loss(p, b, cfg, r))(compute, batch, rng)
+        red = {}
+        for k, g in grads.items():
+            gv = g.value
+            if k in part_axes:
+                if data_axes:
+                    gv = compressed_psum_mean(gv, data_axes,
+                                              cfg.compression)
+                red[k] = Param(gv, params[k].axes)
+            else:
+                gv = compressed_psum_mean(gv, axis_names, cfg.compression)
+                red[k] = Param(shard_of_full(gv, gather_specs[k], mesh),
+                               params[k].axes)
         if cfg.optimizer == "sgd":
-            new_params = _sgd_step(params, grads, cfg.learning_rate)
+            new_params = _sgd_step(params, red, cfg.learning_rate)
         else:
             m0 = jax.tree.map(jnp.zeros_like, params)
-            new_params, _, _ = _adam_step(params, grads, m0, m0,
+            new_params, _, _ = _adam_step(params, red, m0, m0,
                                           cfg.learning_rate, 1)
         return new_params, jax.lax.pmean(loss, axis_names)
 
     it = shard_map(body, mesh=mesh,
-                   in_specs=(pspecs, batch_spec, P()),
-                   out_specs=(pspecs, P()), check_rep=False)
+                   in_specs=(entry_specs, batch_spec, P()),
+                   out_specs=(entry_specs, P()), check_rep=False)
     if mode == "eager":
-        return it, pspecs, batch_spec
+        return it, entry_specs, batch_spec
     donate = (0,) if mode == "jit_donate" else ()
-    return jax.jit(it, donate_argnums=donate), pspecs, batch_spec
+    return jax.jit(it, donate_argnums=donate), entry_specs, batch_spec
 
 
 def measure_sharded_trial(cfg: LeNet5Config, mode: str, *,
@@ -296,11 +342,12 @@ def measure_trial(cfg: LeNet5Config, mode: str, *, n_iters: int = 3,
     cal = calibration if calibration is not None else load_calibration()
     key = jax.random.PRNGKey(seed)
     params = init_lenet(key, cfg)    # Param tree; tree ops map through
-    # Compute runs on the per-device sub-batch: the batch shards over the
-    # strategy's *data* axis only (tp replicates it over model, exactly
-    # like the measured shard_map path).
-    data_shards = mesh_axes_for(cfg.strategy, cfg.n_devices).get("data", 1)
-    per_dev = max(cfg.batch_size // data_shards, 1)
+    # Compute runs on the per-device compute-equivalent sub-batch: the
+    # batch shards over the data axis and the measured shard_map path
+    # additionally partitions tensor-parallel compute over "model", so a
+    # device performs ~batch/n of the per-iteration math for every
+    # strategy (dp/fsdp have model=1, so this is the plain data split).
+    per_dev = max(cfg.batch_size // max(cfg.n_devices, 1), 1)
     batch = lenet_batch(cfg, step=0, seed=seed, batch=per_dev)
     it = make_iteration(cfg, mode)
 
@@ -551,7 +598,7 @@ def measure_sharded_arch_trial(point: ArchPoint, cfg, tcfg, mode: str, *,
     shardings = sharded_state_shardings(cfg, tcfg, mesh, point.strategy,
                                         specs)
     step_raw = make_sharded_train_step(cfg, tcfg, mesh, point.strategy,
-                                       state_specs=specs)
+                                       state_specs=specs, overlap=True)
     key = jax.random.PRNGKey(seed)
     state = init_sharded_train_state(key, cfg, tcfg, mesh)
     batch = make_batch_for(cfg, point.batch_size, point.seq_len, seed=seed)
@@ -588,13 +635,13 @@ def measure_arch_trial(point: ArchPoint, mode: str = "jit", *,
 
     cal = calibration if calibration is not None else load_calibration()
     cfg = point.model_config()
-    # Single-device compute on the per-device sub-batch (the batch shards
-    # over the strategy's data axis only; tp replicates it) — compression
-    # off here, it is wire format, not compute.
+    # Single-device compute on the compute-equivalent sub-batch: the
+    # overlap step partitions tensor-parallel compute over "model", so a
+    # device performs ~batch/n of the math for every strategy —
+    # compression off here, it is wire format, not compute.
     tc_comp = TrainConfig(optimizer="sgd", grad_compression="none",
                           remat_policy="none")
-    data_shards = arch_mesh_axes(point.strategy, point.n_devices)["data"]
-    per_dev = max(point.batch_size // data_shards, 1)
+    per_dev = max(point.batch_size // max(point.n_devices, 1), 1)
     key = jax.random.PRNGKey(seed)
     state = init_train_state(key, cfg, tc_comp)
     batch = make_batch_for(cfg, per_dev, point.seq_len, seed=seed)

@@ -30,11 +30,12 @@ from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
 from repro.dist.compression import (compress_tree, compressed_psum_mean,
                                     compressed_psum_mean_ef,
                                     init_error_feedback)
-from repro.dist.sharding import (BATCH_AXES, axis_sizes, gather_to_full,
-                                 manual_mode, param_pspecs, resolve_strategy,
-                                 shard_of_full)
+from repro.dist.sharding import (BATCH_AXES, LocalDim, axis_sizes,
+                                 gather_to_full, manual_mode, param_pspecs,
+                                 resolve_strategy, shard_of_full,
+                                 spec_entries)
 from repro.models import model as MD
-from repro.models.layers import Param, is_param, pvalues
+from repro.models.layers import Param, StreamDim, is_param, pvalues
 from repro.optim import clip_by_global_norm, make_optimizer, warmup_cosine
 from repro.optim.optimizers import OptState
 
@@ -218,9 +219,165 @@ def sharded_batch_ok(mesh, global_batch: int) -> bool:
     return global_batch % n_batch_shards(mesh) == 0
 
 
+class _LeafPlan(NamedTuple):
+    """Per-leaf decision for the overlap (partitioned/streamed) body."""
+    axes: Tuple        # rewritten axes tuple with LocalDim/StreamDim markers
+    gather: P          # eager-gather spec (entries only on eager dims)
+    streamed: bool     # any StreamDim -> grads arrive pre-reduced + sliced
+    repl: float        # replication of this leaf's grad at clip time
+
+
+def _streamable_tree(cfg: ModelConfig, param_shapes):
+    """Bool-at-Param-positions tree: True where per-layer streaming is safe.
+
+    Only scanned segment stacks stream (their gathers then sit *inside*
+    the layer scan, interleaved with compute). Zamba groups share weights
+    across a nested inner scan and encoder-decoder models read segment
+    weights outside the marker-aware paths (``_stacked_cross_kv``), so
+    both keep eager whole-tree gathers.
+    """
+    flags = jax.tree.map(lambda p: False, param_shapes, is_leaf=is_param)
+    if cfg.is_encoder_decoder:
+        return flags
+    for i, seg in enumerate(MD.build_segments(cfg)):
+        if seg.kind == "zamba_group":
+            continue
+        flags["segments"][i] = jax.tree.map(
+            lambda p: True, param_shapes["segments"][i], is_leaf=is_param)
+    return flags
+
+
+def _overlap_plans(cfg: ModelConfig, tcfg: TrainConfig, mesh: Mesh, p_specs):
+    """Classify every parameter dim for the overlap body.
+
+    Per sharded dim, in priority order:
+
+    * **partitioned** (``LocalDim``) — model-sharded and ``tp_live_axes``
+      says the layer code can compute on the local slice (Megatron
+      column/row split, expert-local MoE, local attention heads);
+    * **streamed** (``StreamDim``) — any other sharded dim of a leaf in a
+      scanned segment stack: left sharded, all-gathered per layer inside
+      the scan, gradient reduce-scattered by ``stream_gather``'s backward;
+    * **eager** — everything else keeps the legacy whole-array gather
+      (top-level leaves: embedding, final norm, lm_head, mtp).
+
+    ``repl`` counts how many ranks hold each element of the leaf's
+    *reduced* gradient at clip time: eager dims are gathered full
+    everywhere, so only local dims (and, for streamed leaves, their
+    stream axes) divide the device count.
+    """
+    sizes = axis_sizes(mesh)
+    n_total = 1
+    for s in sizes.values():
+        n_total *= s
+    live = MD.tp_live_axes(cfg, sizes.get("model", 1))
+    shapes = jax.eval_shape(
+        lambda: init_train_state(jax.random.PRNGKey(0), cfg, tcfg)).params
+    streamable = _streamable_tree(cfg, shapes)
+
+    def one(p, spec, can_stream):
+        nd = len(p.axes)
+        entries = spec_entries(spec, nd)
+        axes, gather = [], []
+        shard = 1
+        streamed = False
+        for i, (logical, entry) in enumerate(zip(p.axes, entries)):
+            if entry is None:
+                axes.append(logical)
+                gather.append(None)
+                continue
+            ax = entry if isinstance(entry, tuple) else (entry,)
+            # The MoE router's expert dim is its *output* (last) dim: the
+            # routing math is replicated, so it must stay full even when
+            # expert-parallelism is live for the expert stacks.
+            if (ax == ("model",) and logical in live
+                    and not (logical == "expert" and i == nd - 1)):
+                axes.append(LocalDim(logical, "model", sizes["model"]))
+                gather.append(None)
+                shard *= sizes["model"]
+            elif can_stream:
+                axes.append(StreamDim(logical, entry))
+                gather.append(None)
+                streamed = True
+                for a in ax:
+                    shard *= sizes[a]
+            else:
+                axes.append(logical)
+                gather.append(entry)
+        return _LeafPlan(tuple(axes), P(*gather), streamed,
+                         float(n_total // shard))
+
+    return _zip_params(one, shapes, p_specs, streamable)
+
+
+def overlap_transient_bytes(cfg: ModelConfig, tcfg: TrainConfig, mesh,
+                            strategy="dp", state_specs=None
+                            ) -> Tuple[int, int]:
+    """(eager_bytes, stream_chunk_bytes) the overlap body's gathers add
+    per device beyond the persistent parameter shards.
+
+    Eager leaves (embedding, lm_head, norms, zamba groups, enc-dec
+    segments) hold their whole gathered array for the step; streamed
+    segment stacks materialize at most one layer's gathered slice at a
+    time inside the scan, so their term is the largest single-layer
+    chunk across segments — the number the planner's memory model
+    charges instead of the legacy full-tree transient (docs/PLANNER.md).
+    Partitioned (``LocalDim``) dims are never gathered and contribute to
+    neither term. ``mesh`` may be a Mesh or a plain ``{axis: size}``
+    mapping (the planner prices candidate meshes without devices).
+    """
+    strat = resolve_strategy(strategy)
+    if state_specs is None:
+        state_specs = sharded_state_specs(cfg, tcfg, mesh, strat)
+    plans = _overlap_plans(cfg, tcfg, mesh, state_specs.params)
+    shapes = jax.eval_shape(
+        lambda: init_train_state(jax.random.PRNGKey(0), cfg, tcfg)).params
+    sizes = axis_sizes(mesh)
+
+    def one(p, pl):
+        nbytes = p.value.dtype.itemsize
+        for d in p.value.shape:
+            nbytes *= int(d)
+        local = 1
+        stream_div = 1
+        for ax in pl.axes:
+            if isinstance(ax, LocalDim):
+                local *= int(ax.size)
+            elif isinstance(ax, StreamDim):
+                entry = ax.entry
+                for a in (entry if isinstance(entry, tuple) else (entry,)):
+                    stream_div *= int(sizes.get(a, 1))
+        if pl.streamed and stream_div > 1:
+            layers = max(int(p.value.shape[0]), 1)
+            return ("stream", (nbytes // local) // layers)
+        if pl.streamed:      # degenerate mesh: nothing actually sharded
+            return ("eager", 0)
+        gdiv = 1
+        for entry in tuple(pl.gather):
+            if entry is None:
+                continue
+            for a in (entry if isinstance(entry, tuple) else (entry,)):
+                gdiv *= int(sizes.get(a, 1))
+        return ("eager", nbytes // local - nbytes // (local * gdiv))
+
+    terms = _zip_params(one, shapes, plans)
+    is_term = lambda x: isinstance(x, tuple) and len(x) == 2 and \
+        isinstance(x[0], str)
+    eager = sum(v for k, v in jax.tree_util.tree_leaves(
+        terms, is_leaf=is_term) if k == "eager")
+    chunk = 0
+    if isinstance(terms, dict) and "segments" in terms:
+        for seg in terms["segments"]:
+            chunk = max(chunk, sum(
+                v for k, v in jax.tree_util.tree_leaves(
+                    seg, is_leaf=is_term) if k == "stream"))
+    return int(eager), int(chunk)
+
+
 def make_sharded_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh: Mesh,
                             strategy="dp", microbatches: int = 1,
-                            state_specs: Optional[TrainState] = None):
+                            state_specs: Optional[TrainState] = None,
+                            overlap: bool = False):
     """The measured multi-device path: shard_map with explicit collectives.
 
     Per step, on each device:
@@ -239,10 +396,18 @@ def make_sharded_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh: Mesh,
          device's shard, and apply the optimizer update locally — the
          update is elementwise, so sharded params/moments stay sharded.
 
-    Tensor-model axes: the batch is replicated over ``model``, so every
-    model rank computes identical full gradients and only the *memory*
-    layout (and its gather traffic) differs per strategy — see
-    docs/METHODOLOGY.md for why this is the honest CPU-pool adaptation.
+    With ``overlap=False`` (legacy) the batch is replicated over the
+    ``model`` axis: every model rank computes identical full gradients
+    and only the memory layout (and its gather traffic) differs per
+    strategy. With ``overlap=True`` the step truly partitions compute:
+    ``_overlap_plans`` rewrites each parameter's axes with ``LocalDim``
+    (Megatron tensor-parallel slice over ``model`` — column/row split
+    MLPs, local attention heads, expert-local MoE) and ``StreamDim``
+    (ZeRO-style per-layer streamed gather inside the layer scan, with
+    the gradient reduce-scatter fused into ``stream_gather``'s backward)
+    markers, so parameter gathers and gradient reductions interleave
+    with per-layer compute instead of serializing around the loss — see
+    docs/DIST.md ("Partitioned tp body and streaming gathers").
 
     Restrictions: optimizer must be elementwise (adamw/sgd — adafactor's
     factored moments take row/col means over dims this path shards), the
@@ -313,7 +478,89 @@ def make_sharded_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh: Mesh,
             metrics.update(grad_norm=gnorm, lr=lr, loss=loss)
             return TrainState(new_params, new_opt, new_ef), metrics
 
-    return shard_map(body, mesh=mesh,
+    if not overlap:
+        return shard_map(body, mesh=mesh,
+                         in_specs=(state_specs, P(_batch_entry(mesh))),
+                         out_specs=(state_specs, P()),
+                         check_rep=False)
+
+    plans = _overlap_plans(cfg, tcfg, mesh, p_specs)
+    sizes = axis_sizes(mesh)
+    mesh_axes = tuple(sizes)
+    sorted_sizes = tuple(sorted(sizes.items()))
+    # Streamed leaves reduce on the wire inside stream_gather's backward;
+    # error feedback is stateful and cannot thread through a vjp, so the
+    # int8_ef wire degrades to plain int8 for those leaves (identical for
+    # a fresh state — the residual starts at zero).
+    stream_mode = "int8" if mode == "int8_ef" else mode
+
+    def overlap_body(state: TrainState, batch):
+        with manual_mode(), MD.stream_context(sorted_sizes, batch_axes,
+                                              stream_mode):
+            params = state.params
+            compute_params = _zip_params(
+                lambda p, pl: Param(gather_to_full(p.value, pl.gather),
+                                    pl.axes),
+                params, plans)
+            loss, metrics, grads = _loss_and_grads(grad_fn, compute_params,
+                                                   batch, microbatches)
+            gvals = pvalues(grads) if microbatches <= 1 else grads
+
+            new_ef = state.ef
+            if mode == "int8_ef":
+                pairs = _zip_params(
+                    lambda p, g, e, pl: (
+                        (g.astype(jnp.float32), None) if pl.streamed else
+                        compressed_psum_mean_ef(g.astype(jnp.float32),
+                                                batch_axes, e.value[0])),
+                    params, gvals, state.ef, plans)
+                reduced = _zip_params(lambda p, t: t[0], params, pairs)
+                new_ef = _zip_params(
+                    lambda p, t, e: (e if t[1] is None
+                                     else Param(t[1][None], e.axes)),
+                    params, pairs, state.ef)
+            else:
+                reduced = _zip_params(
+                    lambda p, g, pl: (
+                        g.astype(jnp.float32) if pl.streamed else
+                        compressed_psum_mean(g.astype(jnp.float32),
+                                             batch_axes, mode)),
+                    params, gvals, plans)
+            loss = jax.lax.pmean(loss, batch_axes)
+            metrics = jax.tree.map(lambda m: jax.lax.pmean(m, batch_axes),
+                                   metrics)
+
+            # Partition-aware global-norm clip: every rank contributes its
+            # local sum-of-squares weighted by 1/replication, one psum over
+            # the whole mesh makes the full-gradient norm — then the same
+            # scale as clip_by_global_norm applies elementwise (scaling
+            # commutes with the later slice).
+            contribs = _zip_params(
+                lambda p, g, pl: jnp.sum(
+                    jnp.square(g.astype(jnp.float32))) / pl.repl,
+                params, reduced, plans)
+            total = jax.lax.psum(
+                sum(jax.tree_util.tree_leaves(contribs)), mesh_axes)
+            gnorm = jnp.sqrt(total)
+            scale = jnp.minimum(1.0, tcfg.grad_clip /
+                                jnp.maximum(gnorm, 1e-9))
+            clipped = jax.tree.map(
+                lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                reduced)
+            grads_shard = _zip_params(
+                lambda p, g, pl: Param(shard_of_full(g, pl.gather, mesh),
+                                       p.axes),
+                params, clipped, plans)
+            lr = warmup_cosine(state.opt.step, peak_lr=tcfg.learning_rate,
+                               warmup_steps=tcfg.warmup_steps,
+                               total_steps=tcfg.total_steps)
+            new_params, new_opt = opt_update(params, grads_shard, state.opt,
+                                             tcfg, lr)
+            metrics = dict(metrics)
+            metrics.update(grad_norm=gnorm, lr=lr, loss=loss)
+            return TrainState(new_params, new_opt, new_ef), metrics
+
+    return shard_map(overlap_body, mesh=mesh,
                      in_specs=(state_specs, P(_batch_entry(mesh))),
                      out_specs=(state_specs, P()),
                      check_rep=False)

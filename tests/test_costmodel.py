@@ -180,16 +180,28 @@ def test_per_collective_fit_and_resimulate(tmp_path):
 def test_calibration_json_roundtrip(tmp_path):
     cal = Calibration(label="rt", default=LinkParams(1e-4, 1e9),
                       per_collective={"all_reduce": LinkParams(2e-4, 2e9)},
+                      overlap={"tp": 0.7, "dp": 0.0},
                       meta={"n_rows": 7})
     p = os.path.join(tmp_path, "cal.json")
     cal.save(p)
     with open(p) as f:
         blob = json.load(f)
-    assert blob["version"] == 1
+    assert blob["version"] == 2
     back = Calibration.load(p)
     assert back.default == cal.default
     assert dict(back.per_collective) == dict(cal.per_collective)
     assert back.meta["n_rows"] == 7
+    assert back.overlap_for("tp") == pytest.approx(0.7)
+    assert back.overlap_for("fsdp") == 0.0   # absent strategy → no overlap
+    # version-1 artifacts (no overlap key) still load, with ρ = 0
+    blob.pop("overlap")
+    blob["version"] = 1
+    v1 = os.path.join(tmp_path, "cal_v1.json")
+    with open(v1, "w") as f:
+        json.dump(blob, f)
+    old = Calibration.load(v1)
+    assert old.default == cal.default
+    assert old.overlap_for("tp") == 0.0
     # env-var override: empty value forces the documented defaults
     os.environ["REPRO_CALIBRATION"] = ""
     try:

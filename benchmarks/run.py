@@ -19,7 +19,7 @@ def main() -> None:
                     help="fewer seeds/generations (CI-scale)")
     ap.add_argument("--only", default="",
                     help="comma list: table2..table6,fig7,fig8,roofline,"
-                         "measured,planner")
+                         "measured,planner,overlap,elastic,trace")
     args = ap.parse_args()
 
     from benchmarks import tables
@@ -54,6 +54,21 @@ def main() -> None:
         cmd += ["--quick"] if args.quick else []
         return _pool_subprocess(cmd, "benchmarks/PLANNER.md")
 
+    def overlap():
+        cmd = ["benchmarks.overlap"]
+        cmd += ["--dry-run"] if args.quick else []
+        return _pool_subprocess(cmd, "benchmarks/OVERLAP.md")
+
+    def elastic():
+        cmd = ["benchmarks.elastic"]
+        cmd += ["--dry-run"] if args.quick else []
+        return _pool_subprocess(cmd, "benchmarks/ELASTIC.md")
+
+    def trace():
+        cmd = ["benchmarks.trace_report"]
+        cmd += ["--dry-run"] if args.quick else []
+        return _pool_subprocess(cmd, "benchmarks/TRACE.md")
+
     jobs = {
         "table2": lambda: tables.table2_fit(seeds, maxiter),
         "table3": lambda: tables.table3_fit_l2(seeds, maxiter),
@@ -66,6 +81,9 @@ def main() -> None:
         "roofline": roofline_fit,
         "measured": measured,
         "planner": planner,
+        "overlap": overlap,
+        "elastic": elastic,
+        "trace": trace,
     }
     only = [s for s in args.only.split(",") if s]
     results = {}

@@ -40,6 +40,11 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--devices", type=int, default=0,
                     help="host pool size to force on CPU (0 = auto: 8 "
                          "when --strategy is set, else no pool)")
+    ap.add_argument("--trace-dir", default="",
+                    help="record prefill/decode spans and write "
+                         "trace.jsonl + trace_chrome.json here; empty "
+                         "(default) keeps the zero-overhead disabled "
+                         "recorder")
     ap.add_argument("--dry-run", action="store_true",
                     help="print the serving plan as JSON and exit")
     return ap
@@ -59,11 +64,14 @@ def main(argv=None):
     from repro.launch.mesh import make_mesh
     from repro.launch.specs import cache_specs, params_only_shardings
     from repro.models import model as MD
+    from repro.obs import Metrics, Recorder, write_chrome_trace, write_jsonl
     from repro.train.ft import plan_remesh
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
+    rec = Recorder(enabled=bool(args.trace_dir))
+    obs_metrics = Metrics()
 
     n_dev = len(jax.devices())
     sharded = bool(args.strategy)
@@ -130,21 +138,27 @@ def main(argv=None):
     t0 = time.time()
     logits = None
     with mesh:
-        for pos in range(S):                   # batched prefill-by-decode
-            logits, caches = decode(params, caches, prompt[:, pos:pos + 1],
-                                    pos)
-        jax.block_until_ready(logits)
-        t_prefill = time.time() - t0
+        with rec.span("prefill", category="serve", batch=B, tokens=S):
+            for pos in range(S):               # batched prefill-by-decode
+                logits, caches = decode(params, caches,
+                                        prompt[:, pos:pos + 1], pos)
+            # the barrier the untraced path already has; the span times it
+            jax.block_until_ready(logits)
+            t_prefill = time.time() - t0
 
         out_tokens = []
         tok = reput_tok(jnp.argmax(logits, axis=-1)[:, None])
         t0 = time.time()
-        for i in range(args.gen):
-            out_tokens.append(tok)
-            logits, caches = decode(params, caches, tok, S + i)
-            tok = reput_tok(jnp.argmax(logits, axis=-1)[:, None])
-        jax.block_until_ready(logits)
-        t_decode = time.time() - t0
+        with rec.span("decode", category="serve", batch=B,
+                      tokens=args.gen):
+            for i in range(args.gen):
+                out_tokens.append(tok)
+                with rec.span("decode_step", category="serve",
+                              step_num=i):
+                    logits, caches = decode(params, caches, tok, S + i)
+                    tok = reput_tok(jnp.argmax(logits, axis=-1)[:, None])
+            jax.block_until_ready(logits)
+            t_decode = time.time() - t0
 
     gen = jnp.concatenate(out_tokens, axis=1)
     report = {
@@ -155,6 +169,23 @@ def main(argv=None):
         "decode_tok_per_s": round(B * args.gen / max(t_decode, 1e-9), 1),
         "sample_tokens": gen[0, :8].tolist(),
     }
+    if rec.enabled:
+        obs_metrics.gauge("prefill_ms").set(t_prefill * 1e3)
+        obs_metrics.gauge("decode_tok_per_s").set(
+            B * args.gen / max(t_decode, 1e-9))
+        for s in rec.find("decode_step"):
+            obs_metrics.histogram("decode_dispatch_ms").observe(
+                s.duration_s * 1e3)
+        os.makedirs(args.trace_dir, exist_ok=True)
+        write_jsonl(os.path.join(args.trace_dir, "trace.jsonl"), rec,
+                    metrics=obs_metrics.to_dict(),
+                    meta={"arch": cfg.name, "mode": "serve",
+                          "strategy": args.strategy or None,
+                          "devices": n_dev})
+        write_chrome_trace(
+            os.path.join(args.trace_dir, "trace_chrome.json"), rec)
+        report["trace"] = {"dir": args.trace_dir,
+                           "spans": len(rec.spans)}
     print(json.dumps(report))
     return report
 

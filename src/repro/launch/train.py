@@ -98,6 +98,20 @@ def build_parser() -> argparse.ArgumentParser:
                     help="estimate per-step collective time from the "
                          "calibrated cost model (repro.perf.costmodel) "
                          "and include it in the plan output")
+    ap.add_argument("--trace-dir", default="",
+                    help="record spans/metrics and write trace.jsonl + "
+                         "trace_chrome.json here; empty (default) keeps "
+                         "the zero-overhead disabled recorder")
+    ap.add_argument("--trace-sync", default="none",
+                    choices=["none", "boundary"],
+                    help="device-sync policy at span boundaries: 'none' "
+                         "never adds a sync the untraced path lacks "
+                         "(preserves comm/compute overlap); 'boundary' "
+                         "blocks for precise span durations")
+    ap.add_argument("--trace-annotate", action="store_true",
+                    help="pass step spans through "
+                         "jax.profiler.StepTraceAnnotation (groups device "
+                         "activity by step in a jax.profiler trace)")
     ap.add_argument("--dry-run", action="store_true",
                     help="print the execution plan as JSON and exit")
     return ap
@@ -161,6 +175,15 @@ def main(argv=None):
     from repro.train.step import sharded_state_specs
     from repro.train.checkpoint import CheckpointManager
     from repro.train.ft import StragglerDetector, plan_recovery, plan_remesh
+    from repro.obs import (Metrics, Recorder, StragglerMonitor,
+                           collective_bytes, observe_step,
+                           record_memory_watermarks, write_chrome_trace,
+                           write_jsonl)
+
+    rec = Recorder(enabled=bool(args.trace_dir),
+                   sync_policy=args.trace_sync,
+                   annotate=args.trace_annotate)
+    obs_metrics = Metrics()
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -302,7 +325,27 @@ def main(argv=None):
         else:
             state = init_train_state(key, cfg, tcfg)
 
+    def _comm_byte_terms():
+        """Per-collective bytes of one step (op/axis/tensor keyed), for
+        the comm_bytes/* counters — derived from the calibrated schedule
+        layer, recomputed whenever (strategy, mesh) changes."""
+        if not rec.enabled:
+            return {}
+        from repro.dist.compression import WIRE_BITS
+        from repro.perf.planner.space import model_comm_sizes
+        try:
+            pb, ab = model_comm_sizes(cfg, args.batch, args.seq)
+            return collective_bytes(
+                args.strategy, n_dev, pb,
+                wire_bits=WIRE_BITS[args.compression], act_bytes=ab,
+                axes={k: int(v) for k, v in mesh.shape.items()})
+        except Exception:
+            return {}
+
     detector = StragglerDetector(tolerance=args.straggler_tol)
+    monitor = StragglerMonitor(detector, metrics=obs_metrics, recorder=rec)
+    comm_terms = _comm_byte_terms()
+    phase = "warmup"             # the first step pays the jit compile
     loss_by_step = {}
     step_times = []
     recovery = None
@@ -315,20 +358,23 @@ def main(argv=None):
         if (args.simulate_failure and step >= args.simulate_failure
                 and recovery is None):
             # ---- simulated device loss: re-plan, reshard, resume ----
-            t0 = time.perf_counter()
             lost = args.fail_devices or n_dev // 2
-            survivors = jax.devices()[:max(n_dev - lost, 1)]
-            compute_ref = None
-            if step_times:
-                h = sorted(step_times)
-                compute_ref = (h[len(h) // 2], n_batch_shards(mesh))
-            rplan = plan_recovery(
-                cfg, len(survivors), batch=args.batch, seq=args.seq,
-                optimizer=args.optimizer, compression=args.compression,
-                strategy=(None if args.recover_strategy == "auto"
-                          else args.recover_strategy),
-                compute_ref=compute_ref)
-            plan_s = time.perf_counter() - t0
+            rec.event("failure", step=int(step), lost_devices=int(lost))
+            with rec.span("recovery/plan", category="recovery",
+                          step_num=step):
+                t0 = time.perf_counter()
+                survivors = jax.devices()[:max(n_dev - lost, 1)]
+                compute_ref = None
+                if step_times:
+                    h = sorted(step_times)
+                    compute_ref = (h[len(h) // 2], n_batch_shards(mesh))
+                rplan = plan_recovery(
+                    cfg, len(survivors), batch=args.batch, seq=args.seq,
+                    optimizer=args.optimizer, compression=args.compression,
+                    strategy=(None if args.recover_strategy == "auto"
+                              else args.recover_strategy),
+                    compute_ref=compute_ref)
+                plan_s = time.perf_counter() - t0
             before = {"mesh": list(mesh.devices.shape),
                       "strategy": args.strategy, "devices": n_dev}
             n_dev = rplan.n_devices
@@ -340,16 +386,21 @@ def main(argv=None):
                   f"recovery plan: {rplan.reason}; path={path} "
                   f"({path_reason})", flush=True)
             t1 = time.perf_counter()
-            skel, st_specs, st_shard, step_fn = build_exec(
-                mesh, args.strategy, path)
-            try:
-                state, ckpt_step = ckpt.restore(skel, shardings=st_shard,
-                                                strict=False)
-            except FileNotFoundError:
-                raise SystemExit(
-                    f"--simulate-failure {args.simulate_failure}: no "
-                    f"checkpoint to recover from (set --ckpt-every <= "
-                    f"the failure step)")
+            with rec.span("recovery/rebuild", category="recovery",
+                          step_num=step):
+                skel, st_specs, st_shard, step_fn = build_exec(
+                    mesh, args.strategy, path)
+            with rec.span("recovery/restore", category="recovery",
+                          step_num=step):
+                try:
+                    state, ckpt_step = ckpt.restore(skel,
+                                                    shardings=st_shard,
+                                                    strict=False)
+                except FileNotFoundError:
+                    raise SystemExit(
+                        f"--simulate-failure {args.simulate_failure}: no "
+                        f"checkpoint to recover from (set --ckpt-every <= "
+                        f"the failure step)")
             restore_s = time.perf_counter() - t1
             recovery = {
                 "at_step": step, "lost_devices": lost,
@@ -367,16 +418,28 @@ def main(argv=None):
                   f"(plan {plan_s*1e3:.0f}ms, restore "
                   f"{restore_s*1e3:.0f}ms)", flush=True)
             detector = StragglerDetector(tolerance=args.straggler_tol)
+            monitor = StragglerMonitor(detector, metrics=obs_metrics,
+                                       recorder=rec)
+            comm_terms = _comm_byte_terms()
+            phase = "recovery/first_step"   # pays the re-jit compile
             step_times = []
             step = ckpt_step
             continue
-        batch = make_batch_for(cfg, args.batch, args.seq, step=step,
-                               seed=args.seed)
-        t0 = time.perf_counter()
-        with mesh:
-            state, metrics = step_fn(state, batch)
-        jax.block_until_ready(metrics["loss"])
-        dt = time.perf_counter() - t0
+        with rec.span("step", category="train", step_num=step,
+                      phase=phase) as sp:
+            with rec.span("data", category="train"):
+                batch = make_batch_for(cfg, args.batch, args.seq,
+                                       step=step, seed=args.seed)
+            t0 = time.perf_counter()
+            with rec.span("dispatch", category="train"):
+                with mesh:
+                    state, metrics = step_fn(state, batch)
+            with rec.span("wait", category="train"):
+                # the loss block the untraced loop already performs —
+                # the span only times it, it adds no new sync
+                jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            sp.set(ms=dt * 1e3)
         if recovery is not None and "first_step_s" not in recovery:
             # first post-recovery step: includes the re-jit compile —
             # the largest share of measured recovery time
@@ -384,7 +447,15 @@ def main(argv=None):
             recovery["recovery_s"] = round(
                 recovery["plan_s"] + recovery["restore_s"] + dt, 4)
         step_times.append(dt)
-        flagged = detector.observe(step, dt)
+        flagged = monitor.observe(step, dt)
+        if rec.enabled:
+            observe_step(obs_metrics, seconds=dt, batch=args.batch,
+                         seq=args.seq)
+            for k, v in comm_terms.items():
+                obs_metrics.counter(f"comm_bytes/{k}").inc(v)
+            if step % args.log_every == 0:
+                record_memory_watermarks(obs_metrics)
+        phase = "steady"
         loss_by_step[step] = float(metrics["loss"])
         if step % args.log_every == 0 or flagged:
             msg = (f"step {step:5d} loss {loss_by_step[step]:.4f} "
@@ -410,6 +481,19 @@ def main(argv=None):
            "straggler_flags": detector.flags}
     if recovery is not None:
         out["recovery"] = recovery
+    if rec.enabled:
+        os.makedirs(args.trace_dir, exist_ok=True)
+        meta = {"arch": cfg.name, "strategy": args.strategy,
+                "path": path, "devices": n_dev,
+                "batch": args.batch, "seq": args.seq,
+                "sync_policy": args.trace_sync}
+        write_jsonl(os.path.join(args.trace_dir, "trace.jsonl"), rec,
+                    metrics=obs_metrics.to_dict(), meta=meta)
+        write_chrome_trace(
+            os.path.join(args.trace_dir, "trace_chrome.json"), rec)
+        out["trace"] = {"dir": args.trace_dir, "spans": len(rec.spans),
+                        "events": len(rec.events)}
+        out["metrics"] = obs_metrics.to_dict()
     print(json.dumps(out))
     return out
 

@@ -1,0 +1,120 @@
+"""Serialization of recorded traces: JSONL event log + Chrome trace.
+
+Two formats, both derived from the same ``Recorder`` contents:
+
+* **JSONL** — one JSON object per line; spans (``type: "span"``), events
+  (``type: "event"``), and an optional trailing metrics snapshot
+  (``type: "metrics"``). Round-trips losslessly through
+  ``read_jsonl`` → ``Recorder``-shaped ``TraceData``.
+
+* **Chrome trace / Perfetto** — the ``traceEvents`` JSON array format
+  (``ph: "X"`` complete events with microsecond ``ts``/``dur``,
+  ``ph: "i"`` instants for recorder events), loadable in
+  ``chrome://tracing`` or https://ui.perfetto.dev. Span categories map
+  to ``cat``; attrs map to ``args``.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+from repro.obs.trace import Recorder, Span
+
+
+@dataclass
+class TraceData:
+    """A deserialized trace: what ``read_jsonl`` hands back."""
+    spans: List[Span] = field(default_factory=list)
+    events: List[Dict[str, Any]] = field(default_factory=list)
+    metrics: Optional[Dict[str, Any]] = None
+    meta: Dict[str, Any] = field(default_factory=dict)
+
+    def find(self, name: str) -> List[Span]:
+        return [s for s in self.spans if s.name == name]
+
+    def children_of(self, span: Span) -> List[Span]:
+        return [s for s in self.spans if s.parent_id == span.span_id]
+
+
+def trace_lines(rec: Recorder, *, metrics: Optional[Dict[str, Any]] = None,
+                meta: Optional[Dict[str, Any]] = None) -> List[str]:
+    """The JSONL lines for a recorder's contents (spans in completion
+    order, then events, then optional metrics/meta records)."""
+    lines: List[str] = []
+    if meta:
+        lines.append(json.dumps({"type": "meta", **meta}, sort_keys=True))
+    for sp in rec.spans:
+        lines.append(json.dumps(sp.to_dict(), sort_keys=True))
+    for ev in rec.events:
+        lines.append(json.dumps(ev, sort_keys=True))
+    if metrics is not None:
+        lines.append(json.dumps({"type": "metrics", "metrics": metrics},
+                                sort_keys=True))
+    return lines
+
+
+def write_jsonl(path, rec: Recorder, *,
+                metrics: Optional[Dict[str, Any]] = None,
+                meta: Optional[Dict[str, Any]] = None) -> None:
+    with open(path, "w") as fh:
+        for line in trace_lines(rec, metrics=metrics, meta=meta):
+            fh.write(line + "\n")
+
+
+def read_jsonl(path) -> TraceData:
+    data = TraceData()
+    with open(path) as fh:
+        for raw in fh:
+            raw = raw.strip()
+            if not raw:
+                continue
+            rec = json.loads(raw)
+            kind = rec.get("type")
+            if kind == "span":
+                data.spans.append(Span.from_dict(rec))
+            elif kind == "event":
+                data.events.append(rec)
+            elif kind == "metrics":
+                data.metrics = rec.get("metrics")
+            elif kind == "meta":
+                data.meta = {k: v for k, v in rec.items() if k != "type"}
+    return data
+
+
+def chrome_trace(rec: Recorder, *, pid: int = 1, tid: int = 1,
+                 process_name: str = "repro") -> Dict[str, Any]:
+    """The recorder's contents as a Chrome-trace ``traceEvents`` dict.
+
+    All spans ran on one host thread (the recorder is a single nested
+    stack), so one pid/tid lane reproduces the nesting visually; the
+    viewer stacks overlapping ``ph:"X"`` events by start time."""
+    t0 = min([s.t_start for s in rec.spans]
+             + [e["t"] for e in rec.events], default=0.0)
+
+    def us(t: float) -> float:
+        return (t - t0) * 1e6
+
+    events: List[Dict[str, Any]] = [{
+        "name": "process_name", "ph": "M", "pid": pid, "tid": tid,
+        "args": {"name": process_name}}]
+    for sp in rec.spans:
+        if sp.t_end is None:
+            continue
+        events.append({
+            "name": sp.name, "cat": sp.category or "span", "ph": "X",
+            "pid": pid, "tid": tid, "ts": us(sp.t_start),
+            "dur": us(sp.t_end) - us(sp.t_start),
+            "args": {**sp.attrs, "span_id": sp.span_id,
+                     "depth": sp.depth}})
+    for ev in rec.events:
+        events.append({
+            "name": ev["name"], "cat": "event", "ph": "i", "s": "t",
+            "pid": pid, "tid": tid, "ts": us(ev["t"]),
+            "args": dict(ev.get("attrs", {}))})
+    return {"traceEvents": events, "displayTimeUnit": "ms"}
+
+
+def write_chrome_trace(path, rec: Recorder, **kw) -> None:
+    with open(path, "w") as fh:
+        json.dump(chrome_trace(rec, **kw), fh, indent=1)

@@ -51,6 +51,7 @@ from repro.data.synthetic import lenet_batch
 from repro.dist.compression import WIRE_BITS, compressed_psum_mean
 from repro.dist.sharding import gather_to_full, shard_of_full
 from repro.models.lenet import feature_dims, init_lenet, lenet_loss
+from repro.obs.trace import current_recorder
 from repro.perf.costmodel import (Calibration, load_calibration,
                                   mesh_axes_for)
 from repro.perf.features import get_spec, lenet_features
@@ -351,16 +352,18 @@ def measure_trial(cfg: LeNet5Config, mode: str, *, n_iters: int = 3,
     batch = lenet_batch(cfg, step=0, seed=seed, batch=per_dev)
     it = make_iteration(cfg, mode)
 
+    rec = current_recorder()
     p = params
-    p, _ = it(p, batch, key)                      # warm-up / compile
-    jax.block_until_ready(p)
-    times = []
-    for i in range(n_iters):
-        t0 = time.perf_counter()
-        p, loss = it(p, batch, key)
-        jax.block_until_ready(loss)
-        times.append(time.perf_counter() - t0)
-    measured = float(np.median(times))
+    with rec.span("compute_probe", category="sweep", mode=mode):
+        p, _ = it(p, batch, key)                  # warm-up / compile
+        jax.block_until_ready(p)
+        times = []
+        for i in range(n_iters):
+            t0 = time.perf_counter()
+            p, loss = it(p, batch, key)
+            jax.block_until_ready(loss)
+            times.append(time.perf_counter() - t0)
+        measured = float(np.median(times))
 
     pb = sum(int(np.prod(x.shape)) * 4 for x in jax.tree.leaves(params))
     comm = comm_seconds(cfg, pb, calibration=cal)
@@ -375,8 +378,10 @@ def measure_trial(cfg: LeNet5Config, mode: str, *, n_iters: int = 3,
         if mode == "eager":
             skip = SKIP_EAGER
         else:
-            t_meas, skip = measure_sharded_trial(cfg, mode,
-                                                 n_iters=n_iters, seed=seed)
+            with rec.span("sharded_probe", category="sweep", mode=mode):
+                t_meas, skip = measure_sharded_trial(cfg, mode,
+                                                     n_iters=n_iters,
+                                                     seed=seed)
             if t_meas is not None:
                 t_meas *= 1e3
     return SweepRow(features=lenet_features(cfg), mode=mode,
@@ -399,12 +404,17 @@ def run_sweep(n_trials: int = 300, modes: Sequence[str] = MODES,
     rng = np.random.default_rng(seed)
     rows: List[Dict] = []
     t0 = time.time()
+    rec = current_recorder()        # disabled default: spans are no-ops
     for i in range(n_trials):
         cfg = sample_config(rng)
         mode = modes[i % len(modes)]
         try:
-            row = measure_trial(cfg, mode, seed=seed + i, sharded=sharded,
-                                calibration=cal)
+            with rec.span("trial", category="sweep", index=i, mode=mode,
+                          n_devices=cfg.n_devices,
+                          strategy=str(cfg.strategy),
+                          batch=cfg.batch_size):
+                row = measure_trial(cfg, mode, seed=seed + i,
+                                    sharded=sharded, calibration=cal)
         except Exception as e:      # a pathological config; record & skip
             rows.append({"error": str(e), "mode": mode,
                          "features": lenet_features(cfg)})
@@ -649,15 +659,17 @@ def measure_arch_trial(point: ArchPoint, mode: str = "jit", *,
     if mode != "eager":
         step = jax.jit(step,
                        donate_argnums=(0,) if mode == "jit_donate" else ())
-    state, _ = step(state, batch)                 # warm-up / compile
-    jax.block_until_ready(state)
-    times = []
-    for _ in range(n_iters):
-        t0 = time.perf_counter()
-        state, m = step(state, batch)
-        jax.block_until_ready(m["loss"])
-        times.append(time.perf_counter() - t0)
-    measured = float(np.median(times))
+    rec = current_recorder()
+    with rec.span("compute_probe", category="sweep", mode=mode):
+        state, _ = step(state, batch)             # warm-up / compile
+        jax.block_until_ready(state)
+        times = []
+        for _ in range(n_iters):
+            t0 = time.perf_counter()
+            state, m = step(state, batch)
+            jax.block_until_ready(m["loss"])
+            times.append(time.perf_counter() - t0)
+        measured = float(np.median(times))
 
     pb, ab = model_comm_sizes(cfg, point.batch_size, point.seq_len)
     comm = estimate_comm(point.strategy, point.n_devices, pb,
@@ -672,8 +684,9 @@ def measure_arch_trial(point: ArchPoint, mode: str = "jit", *,
             tcfg = TrainConfig(optimizer="sgd",
                                grad_compression=point.compression,
                                remat_policy="none")
-            t_meas, skip = measure_sharded_arch_trial(
-                point, cfg, tcfg, mode, n_iters=n_iters, seed=seed)
+            with rec.span("sharded_probe", category="sweep", mode=mode):
+                t_meas, skip = measure_sharded_arch_trial(
+                    point, cfg, tcfg, mode, n_iters=n_iters, seed=seed)
             if t_meas is not None:
                 t_meas *= 1e3
     return SweepRow(features=point.features(), mode=mode,
@@ -697,12 +710,18 @@ def run_arch_sweep(family: str, n_trials: int = 48, mode: str = "jit",
     rng = np.random.default_rng(seed)
     rows: List[Dict] = []
     t0 = time.time()
+    rec = current_recorder()        # disabled default: spans are no-ops
     for i in range(n_trials):
         point = sample_arch_point(family, rng)
         try:
-            row = measure_arch_trial(point, mode, n_iters=n_iters,
-                                     seed=seed + i, sharded=sharded,
-                                     calibration=cal)
+            with rec.span("trial", category="sweep", index=i,
+                          family=family, mode=mode,
+                          n_devices=point.n_devices,
+                          strategy=str(point.strategy),
+                          batch=point.batch_size):
+                row = measure_arch_trial(point, mode, n_iters=n_iters,
+                                         seed=seed + i, sharded=sharded,
+                                         calibration=cal)
         except Exception as e:      # a pathological point; record & skip
             rows.append({"error": str(e), "mode": mode, "family": family,
                          "features": point.features()})

@@ -434,46 +434,57 @@ def make_sharded_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh: Mesh,
     p_specs = state_specs.params
 
     def body(state: TrainState, batch):
+        # jax.named_scope labels are trace-time only: they name the HLO
+        # regions after the cost model's terms (visible in jax.profiler /
+        # Perfetto) and cost nothing in the compiled program.
         with manual_mode():
             params = state.params
-            full_params = _zip_params(
-                lambda p, s: Param(gather_to_full(p.value, s), p.axes),
-                params, p_specs)
-            loss, metrics, grads = _loss_and_grads(grad_fn, full_params,
-                                                   batch, microbatches)
+            with jax.named_scope("obs:gather_params"):
+                full_params = _zip_params(
+                    lambda p, s: Param(gather_to_full(p.value, s), p.axes),
+                    params, p_specs)
+            with jax.named_scope("obs:grad_compute"):
+                loss, metrics, grads = _loss_and_grads(
+                    grad_fn, full_params, batch, microbatches)
             gvals = pvalues(grads) if microbatches <= 1 else grads
 
             new_ef = state.ef
-            if mode == "int8_ef":
-                # pairs holds (mean, new_err) tuples at Param positions;
-                # always unzip against the params treedef so the tuples
-                # are never mistaken for pytree internals.
-                pairs = _zip_params(
-                    lambda p, g, e: compressed_psum_mean_ef(
-                        g.astype(jnp.float32), batch_axes, e.value[0]),
-                    params, gvals, state.ef)
-                reduced = _zip_params(lambda p, t: t[0], params, pairs)
-                new_ef = _zip_params(
-                    lambda p, t, e: Param(t[1][None], e.axes),
-                    params, pairs, state.ef)
-            else:
-                reduced = jax.tree.map(
-                    lambda g: compressed_psum_mean(g.astype(jnp.float32),
-                                                   batch_axes, mode),
-                    gvals)
-            loss = jax.lax.pmean(loss, batch_axes)
-            metrics = jax.tree.map(lambda m: jax.lax.pmean(m, batch_axes),
-                                   metrics)
+            with jax.named_scope("obs:grad_reduce"):
+                if mode == "int8_ef":
+                    # pairs holds (mean, new_err) tuples at Param
+                    # positions; always unzip against the params treedef
+                    # so the tuples are never mistaken for pytree
+                    # internals.
+                    pairs = _zip_params(
+                        lambda p, g, e: compressed_psum_mean_ef(
+                            g.astype(jnp.float32), batch_axes, e.value[0]),
+                        params, gvals, state.ef)
+                    reduced = _zip_params(lambda p, t: t[0], params, pairs)
+                    new_ef = _zip_params(
+                        lambda p, t, e: Param(t[1][None], e.axes),
+                        params, pairs, state.ef)
+                else:
+                    reduced = jax.tree.map(
+                        lambda g: compressed_psum_mean(
+                            g.astype(jnp.float32), batch_axes, mode),
+                        gvals)
+                loss = jax.lax.pmean(loss, batch_axes)
+                metrics = jax.tree.map(
+                    lambda m: jax.lax.pmean(m, batch_axes), metrics)
 
-            reduced, gnorm = clip_by_global_norm(reduced, tcfg.grad_clip)
-            grads_shard = _zip_params(
-                lambda g, s, p: Param(shard_of_full(g, s, mesh), p.axes),
-                reduced, p_specs, params)
-            lr = warmup_cosine(state.opt.step, peak_lr=tcfg.learning_rate,
-                               warmup_steps=tcfg.warmup_steps,
-                               total_steps=tcfg.total_steps)
-            new_params, new_opt = opt_update(params, grads_shard, state.opt,
-                                             tcfg, lr)
+            with jax.named_scope("obs:update"):
+                reduced, gnorm = clip_by_global_norm(reduced,
+                                                     tcfg.grad_clip)
+                grads_shard = _zip_params(
+                    lambda g, s, p: Param(shard_of_full(g, s, mesh),
+                                          p.axes),
+                    reduced, p_specs, params)
+                lr = warmup_cosine(state.opt.step,
+                                   peak_lr=tcfg.learning_rate,
+                                   warmup_steps=tcfg.warmup_steps,
+                                   total_steps=tcfg.total_steps)
+                new_params, new_opt = opt_update(params, grads_shard,
+                                                 state.opt, tcfg, lr)
             metrics = dict(metrics)
             metrics.update(grad_norm=gnorm, lr=lr, loss=loss)
             return TrainState(new_params, new_opt, new_ef), metrics
@@ -498,64 +509,73 @@ def make_sharded_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh: Mesh,
         with manual_mode(), MD.stream_context(sorted_sizes, batch_axes,
                                               stream_mode):
             params = state.params
-            compute_params = _zip_params(
-                lambda p, pl: Param(gather_to_full(p.value, pl.gather),
-                                    pl.axes),
-                params, plans)
-            loss, metrics, grads = _loss_and_grads(grad_fn, compute_params,
-                                                   batch, microbatches)
+            with jax.named_scope("obs:gather_params"):
+                # eager gathers only — streamed/partitioned leaves gather
+                # inside the layer scan, interleaved with compute
+                compute_params = _zip_params(
+                    lambda p, pl: Param(gather_to_full(p.value, pl.gather),
+                                        pl.axes),
+                    params, plans)
+            with jax.named_scope("obs:grad_compute"):
+                loss, metrics, grads = _loss_and_grads(
+                    grad_fn, compute_params, batch, microbatches)
             gvals = pvalues(grads) if microbatches <= 1 else grads
 
             new_ef = state.ef
-            if mode == "int8_ef":
-                pairs = _zip_params(
-                    lambda p, g, e, pl: (
-                        (g.astype(jnp.float32), None) if pl.streamed else
-                        compressed_psum_mean_ef(g.astype(jnp.float32),
-                                                batch_axes, e.value[0])),
-                    params, gvals, state.ef, plans)
-                reduced = _zip_params(lambda p, t: t[0], params, pairs)
-                new_ef = _zip_params(
-                    lambda p, t, e: (e if t[1] is None
-                                     else Param(t[1][None], e.axes)),
-                    params, pairs, state.ef)
-            else:
-                reduced = _zip_params(
-                    lambda p, g, pl: (
-                        g.astype(jnp.float32) if pl.streamed else
-                        compressed_psum_mean(g.astype(jnp.float32),
-                                             batch_axes, mode)),
-                    params, gvals, plans)
-            loss = jax.lax.pmean(loss, batch_axes)
-            metrics = jax.tree.map(lambda m: jax.lax.pmean(m, batch_axes),
-                                   metrics)
+            with jax.named_scope("obs:grad_reduce"):
+                if mode == "int8_ef":
+                    pairs = _zip_params(
+                        lambda p, g, e, pl: (
+                            (g.astype(jnp.float32), None) if pl.streamed
+                            else compressed_psum_mean_ef(
+                                g.astype(jnp.float32), batch_axes,
+                                e.value[0])),
+                        params, gvals, state.ef, plans)
+                    reduced = _zip_params(lambda p, t: t[0], params, pairs)
+                    new_ef = _zip_params(
+                        lambda p, t, e: (e if t[1] is None
+                                         else Param(t[1][None], e.axes)),
+                        params, pairs, state.ef)
+                else:
+                    reduced = _zip_params(
+                        lambda p, g, pl: (
+                            g.astype(jnp.float32) if pl.streamed else
+                            compressed_psum_mean(g.astype(jnp.float32),
+                                                 batch_axes, mode)),
+                        params, gvals, plans)
+                loss = jax.lax.pmean(loss, batch_axes)
+                metrics = jax.tree.map(
+                    lambda m: jax.lax.pmean(m, batch_axes), metrics)
 
             # Partition-aware global-norm clip: every rank contributes its
             # local sum-of-squares weighted by 1/replication, one psum over
             # the whole mesh makes the full-gradient norm — then the same
             # scale as clip_by_global_norm applies elementwise (scaling
             # commutes with the later slice).
-            contribs = _zip_params(
-                lambda p, g, pl: jnp.sum(
-                    jnp.square(g.astype(jnp.float32))) / pl.repl,
-                params, reduced, plans)
-            total = jax.lax.psum(
-                sum(jax.tree_util.tree_leaves(contribs)), mesh_axes)
-            gnorm = jnp.sqrt(total)
-            scale = jnp.minimum(1.0, tcfg.grad_clip /
-                                jnp.maximum(gnorm, 1e-9))
-            clipped = jax.tree.map(
-                lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
-                reduced)
-            grads_shard = _zip_params(
-                lambda p, g, pl: Param(shard_of_full(g, pl.gather, mesh),
-                                       p.axes),
-                params, clipped, plans)
-            lr = warmup_cosine(state.opt.step, peak_lr=tcfg.learning_rate,
-                               warmup_steps=tcfg.warmup_steps,
-                               total_steps=tcfg.total_steps)
-            new_params, new_opt = opt_update(params, grads_shard, state.opt,
-                                             tcfg, lr)
+            with jax.named_scope("obs:update"):
+                contribs = _zip_params(
+                    lambda p, g, pl: jnp.sum(
+                        jnp.square(g.astype(jnp.float32))) / pl.repl,
+                    params, reduced, plans)
+                total = jax.lax.psum(
+                    sum(jax.tree_util.tree_leaves(contribs)), mesh_axes)
+                gnorm = jnp.sqrt(total)
+                scale = jnp.minimum(1.0, tcfg.grad_clip /
+                                    jnp.maximum(gnorm, 1e-9))
+                clipped = jax.tree.map(
+                    lambda g: (g.astype(jnp.float32) * scale).astype(
+                        g.dtype),
+                    reduced)
+                grads_shard = _zip_params(
+                    lambda p, g, pl: Param(
+                        shard_of_full(g, pl.gather, mesh), p.axes),
+                    params, clipped, plans)
+                lr = warmup_cosine(state.opt.step,
+                                   peak_lr=tcfg.learning_rate,
+                                   warmup_steps=tcfg.warmup_steps,
+                                   total_steps=tcfg.total_steps)
+                new_params, new_opt = opt_update(params, grads_shard,
+                                                 state.opt, tcfg, lr)
             metrics = dict(metrics)
             metrics.update(grad_norm=gnorm, lr=lr, loss=loss)
             return TrainState(new_params, new_opt, new_ef), metrics

@@ -36,7 +36,8 @@ FENCE_RE = re.compile(r"^```(\S*)\s*(.*)$")
 # modules whose documented commands accept --dry-run (doctest smoke)
 DRY_RUNNABLE = ("repro.launch.train", "repro.launch.serve",
                 "benchmarks.measured_sweep", "benchmarks.arch_sweep",
-                "benchmarks.plan", "repro.perf.costmodel.calibrate")
+                "benchmarks.plan", "benchmarks.trace_report",
+                "repro.perf.costmodel.calibrate")
 CMD_TIMEOUT = 240
 
 

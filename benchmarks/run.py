@@ -19,7 +19,7 @@ def main() -> None:
                     help="fewer seeds/generations (CI-scale)")
     ap.add_argument("--only", default="",
                     help="comma list: table2..table6,fig7,fig8,roofline,"
-                         "measured,planner,overlap,elastic,trace")
+                         "measured,planner,overlap,elastic,ft,trace")
     args = ap.parse_args()
 
     from benchmarks import tables
@@ -69,6 +69,20 @@ def main() -> None:
         cmd += ["--dry-run"] if args.quick else []
         return _pool_subprocess(cmd, "benchmarks/TRACE.md")
 
+    def ft():
+        # supervised fault-tolerance drill — a script entry point (it
+        # forces its own pool), so the argv shape differs from -m jobs
+        import subprocess
+        import sys
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        r = subprocess.run([sys.executable,
+                            os.path.join(root, "tools", "ft_smoke.py")],
+                           cwd=root, capture_output=True, text=True)
+        print(r.stdout[-4000:])
+        if r.returncode != 0:
+            raise RuntimeError(r.stderr[-2000:])
+        return {"see": "tools/ft_smoke.py"}
+
     jobs = {
         "table2": lambda: tables.table2_fit(seeds, maxiter),
         "table3": lambda: tables.table3_fit_l2(seeds, maxiter),
@@ -83,6 +97,7 @@ def main() -> None:
         "planner": planner,
         "overlap": overlap,
         "elastic": elastic,
+        "ft": ft,
         "trace": trace,
     }
     only = [s for s in args.only.split(",") if s]

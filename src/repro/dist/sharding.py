@@ -505,6 +505,57 @@ def assemble_shards(blocks: Mapping[Tuple[int, ...], "object"],
     return full
 
 
+def assemble_region(blocks: Mapping[Tuple[int, ...], "object"],
+                    shape: Sequence[int], grid: Sequence[int],
+                    region: Sequence[slice]):
+    """Stitch only the sub-array at ``region`` (per-dim global slices)
+    from the ``{grid-coordinate: block}`` map — the partial inverse of
+    sharding that shard-to-shard checkpoint restore needs: a target
+    device's shard is assembled from just the *overlapping* source
+    blocks, never the full array.
+
+    ``region`` slices may use ``None`` start/stop (full dim); trailing
+    dims may be omitted. ``blocks`` only needs ``__getitem__``, so a
+    lazy mapping can defer reading blocks the region never touches.
+    """
+    import numpy as np
+
+    shape = tuple(int(s) for s in shape)
+    grid = tuple(int(g) for g in grid)
+    if not shape:
+        return np.asarray(blocks[()])
+    region = tuple(region) + (slice(None),) * (len(shape) - len(region))
+    bounds = []
+    for dim, sl in zip(shape, region):
+        start = 0 if sl.start is None else int(sl.start)
+        stop = dim if sl.stop is None else int(sl.stop)
+        bounds.append((max(start, 0), min(stop, dim)))
+    out_shape = tuple(max(e - s, 0) for s, e in bounds)
+    block_dims = tuple(d // g for d, g in zip(shape, grid))
+    if 0 in out_shape:
+        probe = np.asarray(blocks[(0,) * len(shape)])
+        return np.empty(out_shape, dtype=probe.dtype)
+    lo = tuple(s // b for (s, _), b in zip(bounds, block_dims))
+    hi = tuple((e - 1) // b for (_, e), b in zip(bounds, block_dims))
+    out = None
+    for offset in np.ndindex(*[h - l + 1 for l, h in zip(lo, hi)]):
+        coord = tuple(l + o for l, o in zip(lo, offset))
+        blk = np.asarray(blocks[coord])
+        if blk.shape != block_dims:
+            raise ValueError(f"shard block {blk.shape} does not tile "
+                             f"{shape} on grid {grid}")
+        if out is None:
+            out = np.empty(out_shape, dtype=blk.dtype)
+        src, dst = [], []
+        for (s, e), c, b in zip(bounds, coord, block_dims):
+            gs = c * b
+            is_, ie = max(s, gs), min(e, gs + b)
+            src.append(slice(is_ - gs, ie - gs))
+            dst.append(slice(is_ - s, ie - s))
+        out[tuple(dst)] = blk[tuple(src)]
+    return out
+
+
 def gather_to_full(x: jax.Array, spec: P) -> jax.Array:
     """Inside ``shard_map``: all-gather a local block up to the full array.
 

@@ -94,6 +94,27 @@ def build_parser() -> argparse.ArgumentParser:
                     choices=sorted(STRATEGIES) + ["auto"],
                     help="strategy after the simulated failure; auto = "
                          "planner pick on the surviving pool")
+    ap.add_argument("--precompile-survivors", type=int, default=0,
+                    help="AOT-compile step programs for the N largest "
+                         "pow2-floor survivor pools in a background "
+                         "thread while training runs, so a recovery "
+                         "skips the re-jit tail (0 = off)")
+    ap.add_argument("--precompile-block", action="store_true",
+                    help="at recovery, wait for the background compile "
+                         "to land instead of falling back to re-jit — "
+                         "drills use this to model a failure arriving "
+                         "in steady state, after the compile finished")
+    ap.add_argument("--inject-ckpt-fault", type=int, default=0,
+                    help="fault-injection: the first N checkpoint "
+                         "writes raise a transient OSError, exercising "
+                         "the supervisor's retry/backoff path")
+    ap.add_argument("--max-retries", type=int, default=4,
+                    help="supervisor retry budget (attempts, not "
+                         "re-tries) for transient checkpoint-I/O "
+                         "failures")
+    ap.add_argument("--straggler-escalate", type=int, default=0,
+                    help="K consecutive straggler-flagged steps trigger "
+                         "a proactive checkpoint (0 = off)")
     ap.add_argument("--report-comm", action="store_true",
                     help="estimate per-step collective time from the "
                          "calibrated cost model (repro.perf.costmodel) "
@@ -175,15 +196,21 @@ def main(argv=None):
     from repro.train.step import sharded_state_specs
     from repro.train.checkpoint import CheckpointManager
     from repro.train.ft import StragglerDetector, plan_recovery, plan_remesh
+    from repro.train.supervisor import (RetryPolicy, Supervisor,
+                                        SurvivorPrecompiler, pow2_floor)
     from repro.obs import (Metrics, Recorder, StragglerMonitor,
                            collective_bytes, observe_step,
-                           record_memory_watermarks, write_chrome_trace,
-                           write_jsonl)
+                           record_memory_watermarks, record_recovery,
+                           write_chrome_trace, write_jsonl)
 
     rec = Recorder(enabled=bool(args.trace_dir),
                    sync_policy=args.trace_sync,
                    annotate=args.trace_annotate)
     obs_metrics = Metrics()
+    sup = Supervisor(policy=RetryPolicy(max_attempts=max(args.max_retries,
+                                                         1)),
+                     recorder=rec, metrics=obs_metrics,
+                     escalate_after=max(args.straggler_escalate, 1))
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -295,12 +322,19 @@ def main(argv=None):
         return skel, st_specs, st_shard, fn
 
     def save_ckpt(at_step, state, st_specs):
-        if path == "sharded" and st_specs is not None:
-            ckpt.save_sharded(at_step, state, mesh=mesh,
-                              strategy=args.strategy, specs=st_specs,
-                              extra_meta={"arch": cfg.name})
-        else:
-            ckpt.save(at_step, state, extra_meta={"arch": cfg.name})
+        # save + wait under the supervisor: the async writer's failure
+        # surfaces at wait(), so a transient I/O error re-runs the whole
+        # (idempotent, atomic-rename) write with backoff instead of
+        # killing the run, while a fatal error still fails fast.
+        def _write():
+            if path == "sharded" and st_specs is not None:
+                ckpt.save_sharded(at_step, state, mesh=mesh,
+                                  strategy=args.strategy, specs=st_specs,
+                                  extra_meta={"arch": cfg.name})
+            else:
+                ckpt.save(at_step, state, extra_meta={"arch": cfg.name})
+            ckpt.wait()
+        sup.run("checkpoint_save", _write)
 
     skel, st_specs, st_shard, step_fn = build_exec(mesh, args.strategy,
                                                    path)
@@ -308,7 +342,18 @@ def main(argv=None):
     ckpt = None
     state = None
     if args.ckpt_dir:
-        ckpt = CheckpointManager(args.ckpt_dir, keep=3)
+        fault_hook = None
+        if args.inject_ckpt_fault > 0:
+            budget = {"n": args.inject_ckpt_fault}
+
+            def fault_hook(op, at_step):
+                if op == "write" and budget["n"] > 0:
+                    budget["n"] -= 1
+                    raise OSError(f"injected transient ckpt fault at "
+                                  f"step {at_step} "
+                                  f"({budget['n']} remaining)")
+        ckpt = CheckpointManager(args.ckpt_dir, keep=3,
+                                 fault_hook=fault_hook)
         if ckpt.latest_step() is not None:
             # restore *after* the specs exist: the checkpoint may come
             # from a different (mesh, strategy) — reshard on restore
@@ -324,6 +369,49 @@ def main(argv=None):
             state = init_sharded_train_state(key, cfg, tcfg, mesh)
         else:
             state = init_train_state(key, cfg, tcfg)
+
+    precomp = None
+    if args.precompile_survivors > 0:
+        precomp = SurvivorPrecompiler(recorder=rec, metrics=obs_metrics)
+
+    def _submit_precompiles():
+        """Queue AOT builds for the N largest pow2 survivor pools.
+
+        Each build plans the post-failure (strategy, mesh) exactly as
+        the recovery path would (``ft.plan_recovery`` on a prefix of
+        the pool), then ``lower().compile()``s the step program in the
+        precompiler's worker thread while healthy steps keep running.
+        AOT compilation does not seed the jit dispatch cache, so the
+        bundle carries the ``Compiled`` object itself and recovery
+        calls it directly.
+        """
+        batch_skel = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+            example_batch)
+        n_surv = pow2_floor(n_dev)
+        for _ in range(args.precompile_survivors):
+            n_surv //= 2
+            if n_surv < 1:
+                break
+
+            def build(n=n_surv):
+                rplan = plan_recovery(
+                    cfg, n, batch=args.batch, seq=args.seq,
+                    optimizer=args.optimizer,
+                    compression=args.compression,
+                    strategy=(None if args.recover_strategy == "auto"
+                              else args.recover_strategy))
+                m = make_mesh(rplan.mesh_shape, rplan.axis_names,
+                              devices=jax.devices()[:rplan.n_devices])
+                ns = argparse.Namespace(**vars(args))
+                ns.strategy = rplan.strategy
+                p2, _ = _pick_mode(ns, tcfg, m, rplan.n_devices)
+                skel2, specs2, shard2, fn2 = build_exec(m, rplan.strategy,
+                                                        p2)
+                compiled = fn2.lower(skel2, batch_skel).compile()
+                return rplan, (m, p2, skel2, specs2, shard2, compiled)
+
+            precomp.submit((n_surv,), build)
 
     def _comm_byte_terms():
         """Per-collective bytes of one step (op/axis/tensor keyed), for
@@ -346,6 +434,7 @@ def main(argv=None):
     monitor = StragglerMonitor(detector, metrics=obs_metrics, recorder=rec)
     comm_terms = _comm_byte_terms()
     phase = "warmup"             # the first step pays the jit compile
+    precomp_submitted = False
     loss_by_step = {}
     step_times = []
     recovery = None
@@ -360,36 +449,60 @@ def main(argv=None):
             # ---- simulated device loss: re-plan, reshard, resume ----
             lost = args.fail_devices or n_dev // 2
             rec.event("failure", step=int(step), lost_devices=int(lost))
+            survivors = jax.devices()[:max(n_dev - lost, 1)]
+            prog = None
+            compile_s = 0.0
+            if precomp is not None:
+                # the compile span here measures the *exposed* wait for
+                # the background AOT compile — zero once it has landed
+                with rec.span("recovery/compile", category="recovery",
+                              step_num=step):
+                    t_c = time.perf_counter()
+                    prog = precomp.get(len(survivors),
+                                       block=args.precompile_block,
+                                       timeout=600.0)
+                    compile_s = time.perf_counter() - t_c
             with rec.span("recovery/plan", category="recovery",
                           step_num=step):
                 t0 = time.perf_counter()
-                survivors = jax.devices()[:max(n_dev - lost, 1)]
-                compute_ref = None
-                if step_times:
-                    h = sorted(step_times)
-                    compute_ref = (h[len(h) // 2], n_batch_shards(mesh))
-                rplan = plan_recovery(
-                    cfg, len(survivors), batch=args.batch, seq=args.seq,
-                    optimizer=args.optimizer, compression=args.compression,
-                    strategy=(None if args.recover_strategy == "auto"
-                              else args.recover_strategy),
-                    compute_ref=compute_ref)
+                if prog is not None:
+                    # use the plan the bundle was compiled against —
+                    # re-planning could disagree (compute_ref drifts
+                    # with measured step times) and miss the cache
+                    rplan = prog.plan
+                else:
+                    compute_ref = None
+                    if step_times:
+                        h = sorted(step_times)
+                        compute_ref = (h[len(h) // 2],
+                                       n_batch_shards(mesh))
+                    rplan = plan_recovery(
+                        cfg, len(survivors), batch=args.batch,
+                        seq=args.seq, optimizer=args.optimizer,
+                        compression=args.compression,
+                        strategy=(None if args.recover_strategy == "auto"
+                                  else args.recover_strategy),
+                        compute_ref=compute_ref)
                 plan_s = time.perf_counter() - t0
             before = {"mesh": list(mesh.devices.shape),
                       "strategy": args.strategy, "devices": n_dev}
             n_dev = rplan.n_devices
-            mesh = make_mesh(rplan.mesh_shape, rplan.axis_names,
-                             devices=survivors[:rplan.n_devices])
             args.strategy = rplan.strategy
-            path, path_reason = _pick_mode(args, tcfg, mesh, n_dev)
+            t1 = time.perf_counter()
+            if prog is not None:
+                mesh, path, skel, st_specs, st_shard, step_fn = prog.bundle
+                path_reason = "precompiled"
+            else:
+                mesh = make_mesh(rplan.mesh_shape, rplan.axis_names,
+                                 devices=survivors[:rplan.n_devices])
+                path, path_reason = _pick_mode(args, tcfg, mesh, n_dev)
+                with rec.span("recovery/rebuild", category="recovery",
+                              step_num=step):
+                    skel, st_specs, st_shard, step_fn = build_exec(
+                        mesh, args.strategy, path)
             print(f"failure at step {step}: lost {lost} devices; "
                   f"recovery plan: {rplan.reason}; path={path} "
                   f"({path_reason})", flush=True)
-            t1 = time.perf_counter()
-            with rec.span("recovery/rebuild", category="recovery",
-                          step_num=step):
-                skel, st_specs, st_shard, step_fn = build_exec(
-                    mesh, args.strategy, path)
             with rec.span("recovery/restore", category="recovery",
                           step_num=step):
                 try:
@@ -411,12 +524,17 @@ def main(argv=None):
                 "restored_step": ckpt_step,
                 "steps_replayed": step - ckpt_step,
                 "reinit_leaves": list(ckpt.last_restore_report),
+                "precompiled": prog is not None,
+                "restore_mode": ckpt.last_restore_mode,
                 "plan_s": round(plan_s, 4),
+                "compile_s": round(compile_s, 4),
                 "restore_s": round(restore_s, 4)}
             print(f"recovered: resumed from step {ckpt_step} on "
                   f"mesh {rplan.mesh_shape} strategy {args.strategy} "
-                  f"(plan {plan_s*1e3:.0f}ms, restore "
-                  f"{restore_s*1e3:.0f}ms)", flush=True)
+                  f"(plan {plan_s*1e3:.0f}ms, compile "
+                  f"{compile_s*1e3:.0f}ms, restore "
+                  f"{restore_s*1e3:.0f}ms, "
+                  f"{ckpt.last_restore_mode})", flush=True)
             detector = StragglerDetector(tolerance=args.straggler_tol)
             monitor = StragglerMonitor(detector, metrics=obs_metrics,
                                        recorder=rec)
@@ -441,13 +559,29 @@ def main(argv=None):
             dt = time.perf_counter() - t0
             sp.set(ms=dt * 1e3)
         if recovery is not None and "first_step_s" not in recovery:
-            # first post-recovery step: includes the re-jit compile —
-            # the largest share of measured recovery time
+            # first post-recovery step: on the re-jit path it includes
+            # the compile (the largest share of measured recovery
+            # time); on the precompiled path it is a plain step
             recovery["first_step_s"] = round(dt, 4)
             recovery["recovery_s"] = round(
-                recovery["plan_s"] + recovery["restore_s"] + dt, 4)
+                recovery["plan_s"] + recovery["compile_s"]
+                + recovery["restore_s"] + dt, 4)
+            if rec.enabled:
+                record_recovery(obs_metrics, recovery)
         step_times.append(dt)
+        if precomp is not None and not precomp_submitted:
+            # submit after the first healthy step so the background
+            # compile does not contend with the main program's own jit
+            precomp_submitted = True
+            _submit_precompiles()
         flagged = monitor.observe(step, dt)
+        if (ckpt and args.straggler_escalate
+                and sup.note_straggler(step, flagged)):
+            # a persistently slow pool member is a failure precursor:
+            # snapshot now so the eventual recovery replays fewer steps
+            save_ckpt(step + 1, state, st_specs)
+            print(f"proactive checkpoint at step {step} "
+                  f"(persistent straggler)", flush=True)
         if rec.enabled:
             observe_step(obs_metrics, seconds=dt, batch=args.batch,
                          seq=args.seq)
@@ -479,6 +613,10 @@ def main(argv=None):
            "losses": losses,
            "strategy": args.strategy, "mesh": list(mesh.devices.shape),
            "straggler_flags": detector.flags}
+    out["supervisor"] = {"retries": sup.retries,
+                         "proactive_checkpoints": sup.proactive_checkpoints}
+    if precomp is not None:
+        out["supervisor"]["precompile"] = precomp.stats()
     if recovery is not None:
         out["recovery"] = recovery
     if rec.enabled:

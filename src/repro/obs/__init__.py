@@ -18,7 +18,8 @@ from repro.obs.metrics import (Counter, Gauge, Histogram, Metrics,
                                StragglerMonitor, collective_bytes,
                                device_memory_watermarks, observe_step,
                                record_collective_bytes,
-                               record_memory_watermarks, straggler_skew)
+                               record_memory_watermarks, record_recovery,
+                               straggler_skew)
 from repro.obs.trace import (NULL_SPAN, Recorder, Span, current_recorder,
                              set_recorder, use_recorder)
 
@@ -28,7 +29,7 @@ __all__ = [
     "Metrics", "Counter", "Gauge", "Histogram", "StragglerMonitor",
     "observe_step", "collective_bytes", "record_collective_bytes",
     "device_memory_watermarks", "record_memory_watermarks",
-    "straggler_skew",
+    "record_recovery", "straggler_skew",
     "TraceData", "trace_lines", "write_jsonl", "read_jsonl",
     "chrome_trace", "write_chrome_trace",
     "TermRow", "DriftReport", "predicted_terms", "predicted_step_ms",

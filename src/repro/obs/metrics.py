@@ -207,6 +207,25 @@ def record_memory_watermarks(metrics: Metrics,
     return marks
 
 
+def record_recovery(metrics: Metrics, recovery: Dict) -> None:
+    """The driver's measured recovery breakdown written into gauges.
+
+    ``recovery`` is the dict ``repro.launch.train`` assembles after a
+    drill (plan_s / compile_s / restore_s / first_step_s / recovery_s);
+    each present term lands in a ``recovery/<term>_ms`` gauge so traces
+    carry the same breakdown benchmarks/ELASTIC.md tabulates, plus a
+    ``recoveries`` counter and a ``recovery/steps_replayed`` gauge."""
+    metrics.counter("recoveries").inc()
+    for term in ("plan_s", "compile_s", "restore_s", "first_step_s",
+                 "recovery_s"):
+        v = recovery.get(term)
+        if v is not None:
+            metrics.gauge(f"recovery/{term[:-2]}_ms").set(float(v) * 1e3)
+    if recovery.get("steps_replayed") is not None:
+        metrics.gauge("recovery/steps_replayed").set(
+            float(recovery["steps_replayed"]))
+
+
 def straggler_skew(step_seconds: Sequence[float]) -> float:
     """max/median step-time ratio over a window — 1.0 means no skew.
 

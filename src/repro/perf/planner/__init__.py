@@ -27,12 +27,13 @@ from repro.perf.planner.predict import (PlannerModel, Prediction,
                                         default_model_path,
                                         fit_planner_model, predict_points)
 from repro.perf.planner.report import (kendall_tau, plan_lines,
-                                       ranking_metrics, render_plan,
-                                       render_validation_md)
-from repro.perf.planner.search import (Constraints, OBJECTIVES,
-                                       execution_key, objective_value,
-                                       pareto_frontier, rank, top_k,
-                                       validation_slate)
+                                       ranking_metrics, render_elastic_table,
+                                       render_plan, render_validation_md)
+from repro.perf.planner.search import (Constraints, OBJECTIVES, RestartCosts,
+                                       elastic_flip, execution_key,
+                                       expected_time_ms, objective_value,
+                                       pareto_frontier, rank, rank_elastic,
+                                       top_k, validation_slate)
 from repro.perf.planner.space import (ArchLaunchPoint,
                                       DEFAULT_MEM_BUDGET_BYTES, Feasibility,
                                       LaunchPoint, MemoryEstimate,
@@ -50,14 +51,18 @@ from repro.perf.planner.space import (ArchLaunchPoint,
 __all__ = [
     "ArchLaunchPoint", "Constraints", "DEFAULT_MEM_BUDGET_BYTES",
     "Feasibility", "LaunchPoint", "MemoryEstimate", "OBJECTIVES",
-    "PlannerModel", "Prediction", "StrategyDecision", "UNCALIBRATED_NOTE",
+    "PlannerModel", "Prediction", "RestartCosts", "StrategyDecision",
+    "UNCALIBRATED_NOTE",
     "check_feasible", "check_feasible_model", "choose_strategy",
-    "default_model_path", "enumerate_lenet_space", "enumerate_space",
-    "estimate_memory", "estimate_memory_for", "fit_planner_model",
+    "default_model_path", "elastic_flip", "enumerate_lenet_space",
+    "enumerate_space",
+    "estimate_memory", "estimate_memory_for", "expected_time_ms",
+    "fit_planner_model",
     "kendall_tau", "lenet_memory", "execution_key", "model_comm_sizes",
     "model_memory", "objective_value", "pareto_frontier", "plan_lines",
-    "predict_points", "rank", "ranking_metrics", "remesh_predict",
-    "render_plan",
+    "predict_points", "rank", "rank_elastic", "ranking_metrics",
+    "remesh_predict",
+    "render_elastic_table", "render_plan",
     "render_validation_md", "shard_divisor", "top_k", "tree_shard_bytes",
     "validation_slate",
 ]

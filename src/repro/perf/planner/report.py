@@ -131,6 +131,43 @@ def render_plan(picks: Sequence[Prediction],
 
 
 # ---------------------------------------------------------------------------
+# Elastic-aware ranking table (benchmarks/ELASTIC.md)
+# ---------------------------------------------------------------------------
+
+def _pick_label(p: Prediction) -> str:
+    pt = p.point
+    return (f"{pt.strategy} @ {pt.n_devices} dev, batch {pt.batch_size}, "
+            f"wire {pt.cfg.wire_bits}")
+
+
+def render_elastic_table(preds: Sequence[Prediction], costs,
+                         lambdas: Sequence[float]) -> List[str]:
+    """Markdown rows: the elastic-aware top pick per failure rate λ.
+
+    ``costs`` is a ``search.RestartCosts``; rows where the pick differs
+    from the steady-state (λ=0) winner are flagged — the planner's
+    decision genuinely depends on the failure regime there.
+    """
+    from repro.perf.planner.search import (execution_key,
+                                           expected_time_ms, rank_elastic)
+    base = rank_elastic(preds, costs, 0.0)[0]
+    lines = [
+        "| λ (failures / device·hour) | elastic-aware top pick | "
+        "expected ms | steady-state ms | restart overhead |",
+        "|---|---|---|---|---|",
+    ]
+    for lam in lambdas:
+        top = rank_elastic(preds, costs, lam)[0]
+        exp = expected_time_ms(top, costs, lam)
+        flip = execution_key(top) != execution_key(base)
+        label = _pick_label(top) + (" **← pick flips**" if flip else "")
+        lines.append(
+            f"| {lam:g} | {label} | {exp:.1f} | {top.time_ms:.1f} | "
+            f"{exp / max(top.time_ms, 1e-12) - 1.0:.1%} |")
+    return lines
+
+
+# ---------------------------------------------------------------------------
 # PLANNER.md (validation report)
 # ---------------------------------------------------------------------------
 

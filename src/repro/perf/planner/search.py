@@ -11,6 +11,15 @@ ROADMAP's serve-at-scale scenarios trade between):
 ``top_k`` ranks under a single objective after ``Constraints`` filters,
 optionally diversified over (strategy, n_devices) cells so a validation
 slate spans the space instead of clustering around near-ties.
+
+The *elastic-aware* mode (``RestartCosts`` / ``expected_time_ms`` /
+``rank_elastic``) prices failures into the ranking: at failure rate λ
+(failures per device-hour) a pick's expected wall clock is its
+steady-state time inflated by the fraction lost to restarts, with the
+restart cost assembled from measured recovery terms (plan + compile +
+restore, benchmarks/ELASTIC.md) plus replayed steps. Steady-state-best
+and expected-best can disagree — a wider pool is faster per step but
+restarts more often — which is the whole point of ranking on λ.
 """
 from __future__ import annotations
 
@@ -155,6 +164,82 @@ def top_k(preds: Sequence[Prediction], k: int, *,
             chosen.add(id(p))
     # keep the slate ordered by the objective, not by insertion round
     return rank(picks, objective)
+
+
+@dataclass(frozen=True)
+class RestartCosts:
+    """Per-recovery cost terms (ms), measured by the elastic drill.
+
+    ``compile_ms`` is the exposed (re-)compile at recovery: the ~2.7 s
+    re-jit tail cold, near zero when survivor meshes were pre-compiled
+    in the background (``repro.train.supervisor``). ``replay_steps`` is
+    the expected number of steps lost since the last checkpoint
+    (``checkpoint_every / 2`` under uniform failure arrival); each
+    replayed step costs the pick's own predicted step time.
+    """
+    plan_ms: float = 50.0
+    compile_ms: float = 2700.0
+    restore_ms: float = 150.0
+    replay_steps: float = 0.0
+
+    @property
+    def fixed_ms(self) -> float:
+        """Restart cost independent of the pick's step time."""
+        return self.plan_ms + self.compile_ms + self.restore_ms
+
+    def restart_ms(self, pred: Prediction) -> float:
+        return self.fixed_ms + self.replay_steps * pred.step_ms
+
+    def to_dict(self) -> Dict:
+        return {"plan_ms": self.plan_ms, "compile_ms": self.compile_ms,
+                "restore_ms": self.restore_ms,
+                "replay_steps": self.replay_steps}
+
+
+def expected_time_ms(pred: Prediction, costs: RestartCosts,
+                     failures_per_device_hour: float) -> float:
+    """Expected fixed-work wall clock once failures are priced in.
+
+    Failures arrive independently per device at rate λ (per
+    device-hour), so over a window of wall clock T the expected restart
+    count is ``λ · n_devices · T``; each restart costs
+    ``costs.restart_ms(pred)``. To first order the expectation is the
+    steady-state time scaled by the restart-overhead factor::
+
+        E[T] = time_ms · (1 + λ · n_devices · restart_ms / 3.6e6)
+
+    The factor is the *fraction of wall clock lost to restarts* — it is
+    what inflates a long production run at this operating point, so
+    ranking the fixed-work proxy by it ranks the production run too.
+    """
+    lam = float(failures_per_device_hour)
+    if lam <= 0.0:
+        return float(pred.time_ms)
+    overhead = (lam * pred.point.n_devices
+                * costs.restart_ms(pred) / 3.6e6)
+    return float(pred.time_ms) * (1.0 + overhead)
+
+
+def rank_elastic(preds: Sequence[Prediction], costs: RestartCosts,
+                 failures_per_device_hour: float) -> List[Prediction]:
+    """``rank(..., "time")`` with restart cost priced in at rate λ."""
+    return sorted(preds, key=lambda p: expected_time_ms(
+        p, costs, failures_per_device_hour))
+
+
+def elastic_flip(preds: Sequence[Prediction], costs: RestartCosts,
+                 lambdas: Sequence[float]) -> Optional[Dict]:
+    """The first λ in ``lambdas`` where the elastic-aware top pick
+    differs from the steady-state (λ=0) pick, or None if the ranking
+    never flips over the scanned range."""
+    if not preds:
+        return None
+    base = rank_elastic(preds, costs, 0.0)[0]
+    for lam in lambdas:
+        top = rank_elastic(preds, costs, lam)[0]
+        if execution_key(top) != execution_key(base):
+            return {"lambda": float(lam), "base": base, "flipped": top}
+    return None
 
 
 def execution_key(p: Prediction) -> Tuple:

@@ -21,9 +21,23 @@ and GC so the two can never disagree about what belongs to a step):
 
 Writes go to a temp file followed by ``os.replace`` (atomic on POSIX),
 so a crash mid-write can never corrupt the latest checkpoint. A
-background thread does the serialization; ``wait()`` joins it. Restore
-scans newest-first and skips corrupt/partial files (falling back to the
-next-older complete checkpoint).
+background thread does the serialization; ``wait()`` joins it and
+re-raises anything the write thread hit — a flaky disk surfaces as an
+exception the supervisor's retry policy can classify, never a silent
+loss. Restore scans newest-first and skips corrupt/partial files
+(falling back to the next-older complete checkpoint).
+
+Integrity is end-to-end: the sidecar records a CRC32 per npz entry
+(``checksums``), restore verifies every entry it actually reads (a
+mismatch falls back to the previous verified-good checkpoint), and GC
+counts only *verified* checkpoints toward the keep policy — a torn or
+silently-corrupted newer write can never evict the last good state.
+
+When both the checkpoint and the restore target are sharded
+(``sharded-v1`` + ``shardings=``), restore takes a **shard-to-shard**
+path: each target device's block is assembled from only the overlapping
+source blocks (``dist.sharding.assemble_region``) and placed directly
+via ``jax.make_array_from_callback`` — no full-array host reassembly.
 """
 from __future__ import annotations
 
@@ -32,13 +46,15 @@ import os
 import re
 import threading
 import time
-from typing import Any, Dict, List, Optional, Tuple
+import zlib
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
 
-from repro.dist.sharding import (assemble_shards, shard_coord, shard_grid,
-                                 spec_from_json, spec_to_json)
+from repro.dist.sharding import (assemble_region, assemble_shards,
+                                 shard_coord, shard_grid, spec_from_json,
+                                 spec_to_json)
 from repro.models.layers import Param, is_param
 
 _CKPT_RE = re.compile(r"ckpt_(\d+)\.npz$")
@@ -54,6 +70,19 @@ _SHARD_SEP = "@@"
 
 FORMAT_FULL = "full-v1"
 FORMAT_SHARDED = "sharded-v1"
+
+
+class ChecksumError(ValueError):
+    """An npz entry does not match its sidecar CRC — the payload is
+    silently corrupt (valid zip, wrong bytes). Restore treats it like
+    any other corruption: skip to the next-older checkpoint."""
+
+
+def _crc(arr: np.ndarray) -> int:
+    """CRC32 over an entry's dtype, shape and raw bytes."""
+    a = np.ascontiguousarray(arr)
+    c = zlib.crc32(repr((a.dtype.str, a.shape)).encode())
+    return zlib.crc32(a.tobytes(), c) & 0xFFFFFFFF
 
 
 def _upcast(arr: np.ndarray) -> np.ndarray:
@@ -147,6 +176,43 @@ def _flat_state_and_specs(state, specs) -> List[Tuple[str, Any, Any]]:
     return out
 
 
+def _flat_skeleton_and_shardings(skeleton, shardings
+                                 ) -> List[Tuple[str, Any, Any]]:
+    """[(npz leaf key, skeleton leaf, NamedSharding-or-other)] — the
+    restore-side mirror of ``_flat_state_and_specs``: shardings sit at
+    Param positions (``sharded_state_shardings``), so both trees flatten
+    to the same leaf sequence and the keys match the saved npz keys."""
+    from jax.sharding import NamedSharding
+
+    sk = jax.tree_util.tree_flatten_with_path(skeleton, is_leaf=is_param)[0]
+    sh = jax.tree_util.tree_flatten(
+        shardings, is_leaf=lambda x: isinstance(x, NamedSharding))[0]
+    if len(sh) != len(sk):
+        raise ValueError(
+            f"shardings tree has {len(sh)} leaves for {len(sk)} skeleton "
+            f"leaves — pass the state-shaped sharding tree")
+    out = []
+    for (path, leaf), shard in zip(sk, sh):
+        key = _path_key(path)
+        if is_param(leaf):
+            out.append((f"{key}/0", leaf.value, shard))
+        else:
+            out.append((key, leaf, shard))
+    return out
+
+
+class _LazyBlocks:
+    """coord → block mapping that reads (and checksum-verifies) an npz
+    entry only when ``assemble_region`` actually touches it."""
+
+    def __init__(self, names: Dict[Tuple[int, ...], str], load):
+        self._names = names
+        self._load = load
+
+    def __getitem__(self, coord: Tuple[int, ...]) -> np.ndarray:
+        return self._load(self._names[coord])
+
+
 def _shard_blocks(arr, spec, mesh_sizes) -> Dict[Tuple[int, ...], np.ndarray]:
     """{grid-coordinate: host block} of one array — gather-free when the
     array is a committed ``jax.Array`` (each block is one addressable
@@ -173,31 +239,51 @@ def _shard_blocks(arr, spec, mesh_sizes) -> Dict[Tuple[int, ...], np.ndarray]:
 
 
 class CheckpointManager:
-    def __init__(self, directory: str, keep: int = 3, async_write=True):
+    def __init__(self, directory: str, keep: int = 3, async_write=True,
+                 fault_hook: Optional[Callable[[str, int], None]] = None):
+        """``fault_hook(op, step)`` (tests) is called at the start of
+        every payload write and may raise — the injected failure takes
+        the exact path a real I/O error would (captured by the write
+        thread, re-raised at ``wait()``, classified by the supervisor).
+        """
         self.dir = directory
         self.keep = keep
         self.async_write = async_write
+        self.fault_hook = fault_hook
         self._thread: Optional[threading.Thread] = None
+        self._write_error: Optional[BaseException] = None
+        self._verify_cache: Dict[int, Tuple[Tuple, bool]] = {}
         self.last_restore_report: List[str] = []
+        self.last_restore_mode: Optional[str] = None
         os.makedirs(directory, exist_ok=True)
 
     # -- save ---------------------------------------------------------------
     def _write_async(self, payload: Dict[str, np.ndarray], meta: Dict,
                      step: int):
         def _write():
+            if self.fault_hook is not None:
+                self.fault_hook("write", step)
             tmp = os.path.join(self.dir, f".tmp_ckpt_{step}.npz")
             dst = os.path.join(self.dir, f"ckpt_{step}{_DATA_SUFFIX}")
             side = os.path.join(self.dir, f"ckpt_{step}{_META_SUFFIX}")
+            full_meta = {**meta, "checksums": {k: _crc(v)
+                                               for k, v in payload.items()}}
             with open(tmp, "wb") as f:
                 np.savez(f, **payload)
             os.replace(tmp, dst)
             with open(side + ".tmp", "w") as f:
-                json.dump(meta, f)
+                json.dump(full_meta, f)
             os.replace(side + ".tmp", side)
             self._gc()
 
+        def _guarded():
+            try:
+                _write()
+            except BaseException as e:     # surfaces at the next wait()
+                self._write_error = e
+
         if self.async_write:
-            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread = threading.Thread(target=_guarded, daemon=True)
             self._thread.start()
         else:
             _write()
@@ -239,9 +325,15 @@ class CheckpointManager:
         self._write_async(payload, meta, step)
 
     def wait(self):
+        """Join the in-flight write, re-raising its failure (if any) —
+        the synchronization point where a supervised save's retry
+        policy sees transient I/O errors."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._write_error is not None:
+            err, self._write_error = self._write_error, None
+            raise err
 
     # -- restore --------------------------------------------------------------
     def available_steps(self) -> List[int]:
@@ -262,10 +354,56 @@ class CheckpointManager:
                                f"ckpt_{step}{_META_SUFFIX}")) as f:
             return json.load(f)
 
+    def verify(self, step: int) -> bool:
+        """True when the step's payload matches its sidecar: CRC32 per
+        entry when recorded, plain decodability for pre-checksum
+        checkpoints. Cached by (mtime, size) so GC can call it on every
+        sweep without re-reading unchanged files."""
+        path = os.path.join(self.dir, f"ckpt_{step}{_DATA_SUFFIX}")
+        try:
+            st = os.stat(path)
+        except OSError:
+            return False
+        cache_key = (st.st_mtime_ns, st.st_size)
+        hit = self._verify_cache.get(step)
+        if hit is not None and hit[0] == cache_key:
+            return hit[1]
+        ok = True
+        try:
+            sums = self.read_meta(step).get("checksums")
+            with np.load(path) as z:
+                names = set(z.files)
+                if sums is not None:
+                    ok = (set(sums) == names
+                          and all(_crc(z[n]) == int(sums[n])
+                                  for n in names))
+                else:
+                    for n in names:
+                        _ = z[n].shape
+        except Exception:
+            ok = False
+        self._verify_cache[step] = (cache_key, ok)
+        return ok
+
+    @staticmethod
+    def _check_entry(name: str, arr: np.ndarray,
+                     sums: Optional[Dict[str, int]]) -> np.ndarray:
+        if sums is not None:
+            want = sums.get(name)
+            if want is None or _crc(arr) != int(want):
+                raise ChecksumError(f"{name}: checksum mismatch")
+        return arr
+
     def _assemble(self, path: str, meta: Dict) -> Dict[str, np.ndarray]:
-        """Flat {leaf key: full host array} from either format."""
+        """Flat {leaf key: full host array} from either format; every
+        entry read is verified against the sidecar checksums."""
+        sums = meta.get("checksums")
         with np.load(path) as z:
-            raw = {k: z[k] for k in z.files}
+            if sums is not None and set(sums) - set(z.files):
+                raise ChecksumError(
+                    f"{path}: entries missing vs sidecar: "
+                    f"{sorted(set(sums) - set(z.files))[:4]}")
+            raw = {k: self._check_entry(k, z[k], sums) for k in z.files}
         if meta.get("format", FORMAT_FULL) != FORMAT_SHARDED:
             return raw
         mesh = meta["mesh"]
@@ -293,6 +431,70 @@ class CheckpointManager:
             flat[key] = assemble_shards(blocks, shape, grid)
         return flat
 
+    def _restore_shard_to_shard(self, path: str, meta: Dict, skeleton,
+                                shardings, strict: bool):
+        """Sharded checkpoint → sharded target without host reassembly.
+
+        For every leaf whose on-disk block grid tiles the target shape,
+        each target device's block is assembled from only the
+        *overlapping* source blocks (``assemble_region``) inside
+        ``jax.make_array_from_callback`` — when source and target grids
+        are compatible (e.g. 8-way → 4-way over the same dim) a target
+        shard touches at most a couple of source blocks, and a full
+        host copy of the array never exists. Entries are
+        checksum-verified as they are read; blocks the target never
+        needs are neither read nor verified (``verify()`` covers them).
+        """
+        from jax.sharding import NamedSharding
+
+        sums = meta.get("checksums")
+        specs, mesh_sizes = meta["specs"], meta["mesh"]
+        flat: Dict[str, Any] = {}
+        with np.load(path) as z:
+            grouped: Dict[str, Dict[Tuple[int, ...], str]] = {}
+            for name in z.files:
+                key, _, ck = name.rpartition(_SHARD_SEP)
+                coord = tuple(int(c) for c in ck.split("_")) if ck else ()
+                grouped.setdefault(key, {})[coord] = name
+            loaded: Dict[str, np.ndarray] = {}
+
+            def block(name: str) -> np.ndarray:
+                if name not in loaded:
+                    loaded[name] = self._check_entry(name, z[name], sums)
+                return loaded[name]
+
+            for key, leaf, shard in _flat_skeleton_and_shardings(
+                    skeleton, shardings):
+                want_shape, want_dtype = _leaf_shape_dtype(leaf)
+                coords = grouped.get(key)
+                if (coords is None or key not in specs
+                        or not isinstance(shard, NamedSharding)):
+                    continue               # legacy handling via strict
+                spec = spec_from_json(specs[key])
+                grid = shard_grid(spec, want_shape, mesh_sizes)
+                want_coords = (set(np.ndindex(*grid)) if grid
+                               else {()})
+                block_dims = tuple(d // g
+                                   for d, g in zip(want_shape, grid))
+                if set(coords) != want_coords or tuple(
+                        block(coords[next(iter(coords))]).shape
+                        ) != block_dims:
+                    continue               # on-disk shape != target shape
+                blocks = _LazyBlocks(coords, block)
+                regions: Dict[Tuple, np.ndarray] = {}
+
+                def cb(index, blocks=blocks, shape=want_shape,
+                       grid=grid, dtype=want_dtype, regions=regions):
+                    k = tuple((s.start, s.stop) for s in index)
+                    if k not in regions:
+                        regions[k] = np.asarray(assemble_region(
+                            blocks, shape, grid, index)).astype(dtype)
+                    return regions[k]
+
+                flat[key] = jax.make_array_from_callback(
+                    want_shape, shard, cb)
+        return _unflatten_like(skeleton, flat, strict=strict)
+
     def restore(self, skeleton, step: Optional[int] = None, *,
                 shardings=None, strict: bool = True) -> Tuple[Any, int]:
         """Restore into the structure of ``skeleton``. Returns
@@ -307,6 +509,13 @@ class CheckpointManager:
         from the same ``param_pspecs`` resolution the executable step
         uses. ``strict=False`` zero-fills missing/mismatched leaves
         (recorded in ``last_restore_report``).
+
+        A ``sharded-v1`` checkpoint restored with ``shardings`` goes
+        shard-to-shard (no host reassembly) whenever the on-disk grids
+        tile the target shapes; ``last_restore_mode`` records which
+        path ran (``"shard-to-shard"`` / ``"host-assembly"``). Every
+        entry read is checksum-verified; a mismatch falls back to the
+        previous verified-good checkpoint exactly like a torn file.
         """
         self.wait()
         steps = self.available_steps()
@@ -317,13 +526,26 @@ class CheckpointManager:
             path = os.path.join(self.dir, f"ckpt_{s}{_DATA_SUFFIX}")
             try:
                 meta = self.read_meta(s)
-                flat = self._assemble(path, meta)
-                state, dropped = _unflatten_like(skeleton, flat,
-                                                 strict=strict)
+                state, mode = None, "host-assembly"
+                if (shardings is not None
+                        and meta.get("format") == FORMAT_SHARDED):
+                    try:
+                        state, dropped = self._restore_shard_to_shard(
+                            path, meta, skeleton, shardings, strict)
+                        mode = "shard-to-shard"
+                    except ChecksumError:
+                        raise             # corrupt data: never fall back
+                    except Exception:     # structural: host-assembly path
+                        state = None
+                if state is None:
+                    flat = self._assemble(path, meta)
+                    state, dropped = _unflatten_like(skeleton, flat,
+                                                     strict=strict)
             except Exception as e:        # corrupt/partial -> try older
                 last_err = e
                 continue
             self.last_restore_report = dropped
+            self.last_restore_mode = mode
             if shardings is not None:
                 state = jax.device_put(state, shardings)
             return state, s
@@ -333,13 +555,28 @@ class CheckpointManager:
 
     # -- gc -------------------------------------------------------------------
     def _gc(self):
+        # The keep policy counts only *verified* checkpoints: a torn or
+        # checksum-failing newer write must never evict the last
+        # verified-good state (it is the only thing recovery can trust).
+        # Unverified steps are deleted outright — restore would skip
+        # them anyway. If nothing verifies (e.g. every sidecar predates
+        # checksums and the files are unreadable), fall back to the
+        # plain newest-N policy rather than deleting everything.
         steps = self.available_steps()
-        for s in steps[:-self.keep] if self.keep else []:
-            for suffix in (_DATA_SUFFIX, _META_SUFFIX):
-                try:
-                    os.remove(os.path.join(self.dir, f"ckpt_{s}{suffix}"))
-                except OSError:
-                    pass
+        if self.keep:
+            verified = [s for s in steps if self.verify(s)]
+            protect = set(verified[-self.keep:] if verified
+                          else steps[-self.keep:])
+            for s in steps:
+                if s in protect:
+                    continue
+                for suffix in (_DATA_SUFFIX, _META_SUFFIX):
+                    try:
+                        os.remove(os.path.join(self.dir,
+                                               f"ckpt_{s}{suffix}"))
+                    except OSError:
+                        pass
+                self._verify_cache.pop(s, None)
         # orphan temp files and sidecars whose data file is gone
         for name in os.listdir(self.dir):
             full = os.path.join(self.dir, name)

@@ -8,8 +8,14 @@ claims to survive (tests/test_elastic.py, tools/elastic_smoke.py):
   ``launch/train --simulate-failure`` makes);
 * **corrupt_checkpoint** — disk faults against the checkpoint directory:
   garbled payload, truncated write, missing sidecar;
+* **tamper_checkpoint** — *silent* corruption: the payload stays a valid
+  npz and the stale sidecar stays in place, so only the per-entry
+  checksums can tell (the case ``CheckpointManager.verify`` exists for);
 * **slow_rank_times** — a synthetic step-time series with straggling
-  ranks, for exercising ``StragglerDetector`` boundary behaviour.
+  ranks, for exercising ``StragglerDetector`` boundary behaviour;
+* **flaky / failing** — callable factories for the supervisor's retry
+  loop: ``flaky`` raises a transient error N times then succeeds,
+  ``failing`` raises the same error on every call (budget exhaustion).
 
 These are plain helpers, not fixtures — they must also be importable
 from subprocess snippets that run on a forced device pool.
@@ -75,6 +81,64 @@ def corrupt_checkpoint(directory: str, step: Optional[int] = None,
     else:
         raise ValueError(f"unknown corruption mode {mode!r}")
     return path
+
+
+def tamper_checkpoint(directory: str, step: Optional[int] = None) -> str:
+    """Silently corrupt one checkpoint: rewrite the payload as a valid
+    npz with one entry's bytes flipped, leaving the (now stale) sidecar
+    untouched. Decodability checks pass; only checksum verification can
+    detect it. Returns the path hit."""
+    import numpy as np
+
+    path = _step_path(directory, step)
+    with np.load(path) as z:
+        entries = {k: np.array(z[k]) for k in z.files}
+    name = sorted(entries)[0]
+    arr = entries[name]
+    raw = arr.tobytes()
+    flipped = bytes([raw[0] ^ 0xFF]) + raw[1:]
+    entries[name] = np.frombuffer(flipped, dtype=arr.dtype).reshape(
+        arr.shape)
+    with open(path, "wb") as f:
+        np.savez(f, **entries)
+    return path
+
+
+# ---------------------------------------------------------------------------
+# Flaky / repeated I/O failures (supervisor retry loop)
+# ---------------------------------------------------------------------------
+
+def flaky(n_failures: int, fn=None, exc_type=OSError):
+    """A zero-arg callable that raises ``exc_type`` on its first
+    ``n_failures`` calls, then delegates to ``fn`` (default: return the
+    call count) — the fail-N-then-succeed shape a retry loop must
+    absorb. The returned callable exposes ``.calls``."""
+    state = {"calls": 0}
+
+    def attempt():
+        state["calls"] += 1
+        attempt.calls = state["calls"]
+        if state["calls"] <= n_failures:
+            raise exc_type(f"injected transient failure "
+                           f"{state['calls']}/{n_failures}")
+        return fn() if fn is not None else state["calls"]
+
+    attempt.calls = 0
+    return attempt
+
+
+def failing(exc_type=OSError, message: str = "injected repeated failure"):
+    """A zero-arg callable that raises ``exc_type`` on *every* call —
+    for asserting retry-budget exhaustion. Exposes ``.calls``."""
+    state = {"calls": 0}
+
+    def attempt():
+        state["calls"] += 1
+        attempt.calls = state["calls"]
+        raise exc_type(message)
+
+    attempt.calls = 0
+    return attempt
 
 
 # ---------------------------------------------------------------------------

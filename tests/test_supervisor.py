@@ -1,0 +1,409 @@
+"""Fault-tolerance supervisor: classified retry/backoff, checkpoint
+integrity (checksums, verified-good GC, fallback restore), the
+survivor precompiler, straggler escalation, and the elastic-aware
+planner objective.
+
+Everything here is pool-independent (no forced device count), so it
+runs in-process; the pool-dependent precompiled-recovery drill lives in
+tools/ft_smoke.py and benchmarks/elastic.py.
+"""
+import time
+from types import SimpleNamespace
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from faults import failing, flaky, slow_rank_times, tamper_checkpoint
+from repro.dist.sharding import assemble_region
+from repro.models.layers import Param
+from repro.obs import Metrics, StragglerMonitor
+from repro.train.checkpoint import ChecksumError, CheckpointManager
+from repro.train.ft import StragglerDetector
+from repro.train.supervisor import (RetryError, RetryPolicy, Supervisor,
+                                    SurvivorPrecompiler, classify,
+                                    pow2_floor)
+
+
+class FakeRecorder:
+    """Just the ``event`` surface the supervisor reports through."""
+
+    def __init__(self):
+        self.events = []
+
+    def event(self, name, **attrs):
+        self.events.append({"name": name, **attrs})
+
+    def named(self, name):
+        return [e for e in self.events if e["name"] == name]
+
+
+def _supervisor(policy=None, **kw):
+    rec = FakeRecorder()
+    sup = Supervisor(policy=policy or RetryPolicy(),
+                     recorder=rec, metrics=Metrics(),
+                     sleep=lambda s: None, **kw)
+    return sup, rec
+
+
+def _toy_state():
+    return {"w": Param(jnp.arange(12.0).reshape(3, 4), ("a", "b")),
+            "step": jnp.asarray(3)}
+
+
+# ---------------------------------------------------------------------------
+# Classification + backoff schedule
+# ---------------------------------------------------------------------------
+
+def test_classify_transient_vs_fatal():
+    for exc in (OSError("x"), IOError("x"), TimeoutError("x"),
+                ConnectionError("x"), BlockingIOError("x")):
+        assert classify(exc) == "transient"
+    for exc in (ValueError("x"), TypeError("x"), KeyError("x"),
+                AssertionError("x"), KeyboardInterrupt(), SystemExit(1)):
+        assert classify(exc) == "fatal"
+
+
+def test_backoff_schedule_exponential_and_capped():
+    pol = RetryPolicy(backoff_s=0.1, multiplier=2.0, max_backoff_s=0.5)
+    assert pol.backoff_for(1) == pytest.approx(0.1)
+    assert pol.backoff_for(2) == pytest.approx(0.2)
+    assert pol.backoff_for(3) == pytest.approx(0.4)
+    assert pol.backoff_for(4) == pytest.approx(0.5)     # capped
+    assert pol.backoff_for(9) == pytest.approx(0.5)
+
+
+def test_run_retries_transient_then_succeeds():
+    sup, rec = _supervisor(RetryPolicy(max_attempts=4, backoff_s=0.01))
+    sleeps = []
+    sup.sleep = sleeps.append
+    fn = flaky(2)
+    assert sup.run("op", fn) == 3                 # 2 failures + success
+    assert fn.calls == 3
+    assert sup.retries == 2
+    assert sleeps == pytest.approx([0.01, 0.02])  # exponential schedule
+    retries = rec.named("retry")
+    assert len(retries) == 2
+    assert all(r["op"] == "op" and r["will_retry"] for r in retries)
+
+
+def test_run_fails_fast_on_fatal():
+    sup, rec = _supervisor()
+    fn = failing(exc_type=ValueError)
+    with pytest.raises(ValueError):
+        sup.run("op", fn)
+    assert fn.calls == 1                          # no second attempt
+    assert sup.retries == 0
+    assert len(rec.named("fatal")) == 1
+    assert not rec.named("retry")
+
+
+def test_run_exhausts_budget_with_cause():
+    sup, rec = _supervisor(RetryPolicy(max_attempts=3, backoff_s=0.01))
+    fn = failing(exc_type=OSError)
+    with pytest.raises(RetryError) as ei:
+        sup.run("ckpt", fn)
+    assert fn.calls == 3
+    assert ei.value.attempts == 3
+    assert isinstance(ei.value.__cause__, OSError)
+    assert not rec.named("retry")[-1]["will_retry"]
+
+
+def test_run_respects_deadline():
+    clock = {"t": 0.0}
+    sup, _ = _supervisor(RetryPolicy(max_attempts=100, backoff_s=1.0,
+                                     deadline_s=2.5))
+    sup.clock = lambda: clock["t"]
+
+    def tick(s):
+        clock["t"] += s
+    sup.sleep = tick
+    fn = failing(exc_type=OSError)
+    with pytest.raises(RetryError, match="deadline"):
+        sup.run("op", fn)
+    assert fn.calls < 100                         # stopped by the clock
+
+
+# ---------------------------------------------------------------------------
+# Supervised checkpoint writes (flaky I/O through the real manager)
+# ---------------------------------------------------------------------------
+
+def test_supervisor_retries_flaky_checkpoint_write(tmp_path):
+    fault = flaky(2, fn=lambda: None)
+    cm = CheckpointManager(str(tmp_path), keep=3,
+                           fault_hook=lambda op, step: fault())
+    sup, rec = _supervisor(RetryPolicy(max_attempts=4, backoff_s=0.0))
+    state = _toy_state()
+
+    def write():
+        cm.save(5, state)
+        cm.wait()                 # surfaces the async writer's failure
+    sup.run("checkpoint_save", write)
+    assert sup.retries == 2
+    assert cm.latest_step() == 5
+    assert cm.verify(5)
+
+
+def test_supervisor_fails_fast_on_fatal_checkpoint_write(tmp_path):
+    def bad_hook(op, step):
+        raise ValueError("shape mismatch")        # a programming error
+    cm = CheckpointManager(str(tmp_path), keep=3, fault_hook=bad_hook)
+    sup, _ = _supervisor(RetryPolicy(max_attempts=4, backoff_s=0.0))
+
+    def write():
+        cm.save(5, _toy_state())
+        cm.wait()
+    with pytest.raises(ValueError):
+        sup.run("checkpoint_save", write)
+    assert sup.retries == 0
+
+
+def test_wait_reraises_then_clears(tmp_path):
+    cm = CheckpointManager(str(tmp_path), keep=3,
+                           fault_hook=lambda op, step: (_ for _ in ()
+                                                        ).throw(OSError("x")))
+    cm.save(1, _toy_state())
+    with pytest.raises(OSError):
+        cm.wait()
+    cm.wait()                                     # error consumed once
+
+
+# ---------------------------------------------------------------------------
+# Checksums: verify, GC protection, fallback restore
+# ---------------------------------------------------------------------------
+
+def test_verify_detects_silent_tamper(tmp_path):
+    cm = CheckpointManager(str(tmp_path), keep=3, async_write=False)
+    cm.save(1, _toy_state())
+    assert cm.verify(1)
+    tamper_checkpoint(str(tmp_path), 1)
+    assert not cm.verify(1)
+
+
+def test_gc_never_deletes_last_verified_good(tmp_path):
+    import shutil
+
+    cm = CheckpointManager(str(tmp_path), keep=1, async_write=False)
+    cm.save(1, _toy_state())
+    cm.save(2, _toy_state())
+    assert cm.available_steps() == [2]            # keep=1 dropped step 1
+    # a crash mid-write of step 3: payload + sidecar exist but the
+    # payload bytes are wrong (copy step 2's files, then flip a byte)
+    for suffix in (".npz", ".npz.json"):
+        shutil.copy(str(tmp_path / f"ckpt_2{suffix}"),
+                    str(tmp_path / f"ckpt_3{suffix}"))
+    tamper_checkpoint(str(tmp_path), 3)
+    assert not cm.verify(3)
+    cm._gc()
+    # the unverified newest is swept; the verified step 2 survives even
+    # though keep=1 would normally retain only the newest
+    assert cm.available_steps() == [2]
+    assert cm.verify(2)
+
+
+def test_restore_falls_back_to_previous_verified(tmp_path):
+    cm = CheckpointManager(str(tmp_path), keep=3, async_write=False)
+    state = _toy_state()
+    cm.save(1, state)
+    cm.save(2, {"w": Param(jnp.ones((3, 4)) * 9.0, ("a", "b")),
+                "step": jnp.asarray(9)})
+    tamper_checkpoint(str(tmp_path), 2)
+    restored, step = cm.restore(state)
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(restored["w"].value),
+                                  np.arange(12.0).reshape(3, 4))
+
+
+def test_checksum_error_is_a_value_error():
+    assert issubclass(ChecksumError, ValueError)
+    assert classify(ChecksumError("bad")) == "fatal"
+
+
+# ---------------------------------------------------------------------------
+# assemble_region: partial inverse of block sharding
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape,grid", [((4, 6), (2, 2)),
+                                        ((8,), (4,)),
+                                        ((2, 3, 4), (2, 1, 2))])
+def test_assemble_region_matches_numpy_slicing(shape, grid):
+    arr = np.arange(np.prod(shape), dtype=np.float32).reshape(shape)
+    blk = tuple(s // g for s, g in zip(shape, grid))
+    blocks = {}
+    for coord in np.ndindex(*grid):
+        sl = tuple(slice(c * b, (c + 1) * b) for c, b in zip(coord, blk))
+        blocks[coord] = arr[sl]
+    regions = [tuple(slice(None) for _ in shape),
+               tuple(slice(1, s) for s in shape),
+               tuple(slice(0, max(s // 2, 1)) for s in shape)]
+    for region in regions:
+        np.testing.assert_array_equal(
+            assemble_region(blocks, shape, grid, region), arr[region])
+
+
+def test_assemble_region_reads_only_overlapping_blocks():
+    arr = np.arange(16.0).reshape(4, 4)
+    touched = []
+
+    class Lazy:
+        def __getitem__(self, coord):
+            touched.append(coord)
+            i, j = coord
+            return arr[i * 2:(i + 1) * 2, j * 2:(j + 1) * 2]
+
+    region = (slice(0, 2), slice(0, 2))           # exactly block (0, 0)
+    np.testing.assert_array_equal(
+        assemble_region(Lazy(), (4, 4), (2, 2), region), arr[region])
+    assert touched == [(0, 0)]
+
+
+# ---------------------------------------------------------------------------
+# Straggler escalation (monitor -> supervisor)
+# ---------------------------------------------------------------------------
+
+def test_persistent_straggler_triggers_one_proactive_checkpoint():
+    detector = StragglerDetector(tolerance=2.0)
+    metrics = Metrics()
+    rec = FakeRecorder()
+    monitor = StragglerMonitor(detector, metrics=metrics, recorder=rec)
+    sup = Supervisor(recorder=rec, metrics=metrics, escalate_after=3,
+                     sleep=lambda s: None)
+    times = slow_rank_times(0.01, 40, slow_at=range(30, 40), factor=6.0)
+    triggers = []
+    for step, dt in enumerate(times):
+        flagged = monitor.observe(step, dt)
+        if sup.note_straggler(step, flagged):
+            triggers.append(step)
+    assert len(triggers) >= 1
+    assert triggers[0] >= 32          # 3rd consecutive flag, not the 1st
+    assert sup.proactive_checkpoints == len(triggers)
+    evts = rec.named("proactive_checkpoint")
+    assert len(evts) == len(triggers)
+    assert evts[0]["consecutive_flags"] == 3
+
+
+def test_one_off_skew_never_triggers():
+    detector = StragglerDetector(tolerance=2.0)
+    rec = FakeRecorder()
+    monitor = StragglerMonitor(detector, metrics=Metrics(), recorder=rec)
+    sup = Supervisor(recorder=rec, metrics=Metrics(), escalate_after=3,
+                     sleep=lambda s: None)
+    times = slow_rank_times(0.01, 30, slow_at=[10, 20], factor=6.0)
+    for step, dt in enumerate(times):
+        assert not sup.note_straggler(step, monitor.observe(step, dt))
+    assert sup.proactive_checkpoints == 0
+    assert not rec.named("proactive_checkpoint")
+
+
+# ---------------------------------------------------------------------------
+# Survivor precompiler
+# ---------------------------------------------------------------------------
+
+def test_pow2_floor():
+    assert [pow2_floor(n) for n in (1, 2, 3, 4, 5, 7, 8, 9)] == \
+        [1, 2, 2, 4, 4, 4, 8, 8]
+
+
+def test_precompiler_compiles_and_serves_pow2_key():
+    pc = SurvivorPrecompiler(recorder=FakeRecorder())
+    pc.submit((4,), lambda: ("plan4", ("bundle4",)))
+    prog = pc.get(5, block=True, timeout=10.0)    # pow2_floor(5) == 4
+    assert prog is not None and prog.plan == "plan4"
+    assert prog.bundle == ("bundle4",)
+    assert pc.get(7, block=True, timeout=10.0) is prog
+    assert pc.get(2) is None                      # never submitted
+
+
+def test_precompiler_failure_is_contained():
+    rec = FakeRecorder()
+    pc = SurvivorPrecompiler(recorder=rec)
+
+    def boom():
+        raise RuntimeError("lowering failed")
+    pc.submit((2,), boom)
+    pc.submit((4,), lambda: ("plan", ()))         # queued behind the boom
+    assert pc.get(4, block=True, timeout=10.0) is not None
+    assert pc.get(2, block=True, timeout=10.0) is None
+    deadline = time.monotonic() + 5.0
+    while not rec.named("precompile_failed"):
+        assert time.monotonic() < deadline
+        time.sleep(0.01)
+    stats = pc.stats()
+    assert stats["compiled"] == [[4]] and stats["failed"] == [[2]]
+
+
+def test_precompiler_submit_is_idempotent():
+    calls = []
+    pc = SurvivorPrecompiler()
+
+    def build():
+        calls.append(1)
+        return ("p", ())
+    pc.submit((4,), build)
+    assert pc.get(4, block=True, timeout=10.0) is not None
+    pc.submit((4,), build)
+    assert len(calls) == 1
+
+
+# ---------------------------------------------------------------------------
+# Elastic-aware planner objective
+# ---------------------------------------------------------------------------
+
+def _fake_pred(strategy, n_devices, time_ms, step_ms, batch=8):
+    point = SimpleNamespace(strategy=strategy, n_devices=n_devices,
+                            batch_size=batch, compression="none",
+                            cfg=SimpleNamespace(wire_bits=32))
+    return SimpleNamespace(point=point, time_ms=time_ms, step_ms=step_ms)
+
+
+def test_elastic_objective_flips_pick_at_high_lambda():
+    from repro.perf.planner.search import (RestartCosts, elastic_flip,
+                                           expected_time_ms, rank_elastic)
+    wide = _fake_pred("fsdp", 8, time_ms=100.0, step_ms=10.0)
+    narrow = _fake_pred("dp", 2, time_ms=120.0, step_ms=12.0)
+    costs = RestartCosts(plan_ms=50.0, compile_ms=2700.0,
+                         restore_ms=250.0, replay_steps=0.0)
+    assert rank_elastic([wide, narrow], costs, 0.0)[0] is wide
+    assert expected_time_ms(wide, costs, 0.0) == pytest.approx(100.0)
+    # wide pays 8 devices' failure exposure per wall-clock hour; at a
+    # high enough rate the slower-but-narrower pick wins
+    assert rank_elastic([wide, narrow], costs, 100.0)[0] is narrow
+    flip = elastic_flip([wide, narrow], costs, [1.0, 10.0, 100.0])
+    assert flip is not None and flip["lambda"] == 100.0
+    assert flip["flipped"].point.n_devices == 2
+
+
+def test_precompile_moves_the_flip_point():
+    from repro.perf.planner.search import RestartCosts, rank_elastic
+    wide = _fake_pred("fsdp", 8, time_ms=100.0, step_ms=10.0)
+    narrow = _fake_pred("dp", 2, time_ms=120.0, step_ms=12.0)
+    cold = RestartCosts(plan_ms=50.0, compile_ms=2700.0, restore_ms=250.0)
+    warm = RestartCosts(plan_ms=50.0, compile_ms=60.0, restore_ms=250.0)
+    lam = 100.0
+    # same rate: the cold re-jit flips the pick, the precompiled
+    # restart cost keeps the steady-state winner
+    assert rank_elastic([wide, narrow], cold, lam)[0] is narrow
+    assert rank_elastic([wide, narrow], warm, lam)[0] is wide
+
+
+def test_replay_term_scales_with_step_time():
+    from repro.perf.planner.search import RestartCosts, expected_time_ms
+    costs = RestartCosts(plan_ms=0.0, compile_ms=0.0, restore_ms=0.0,
+                         replay_steps=25.0)
+    fast = _fake_pred("dp", 4, time_ms=100.0, step_ms=5.0)
+    slow = _fake_pred("dp", 4, time_ms=100.0, step_ms=50.0)
+    lam = 10.0
+    assert expected_time_ms(slow, costs, lam) > \
+        expected_time_ms(fast, costs, lam)
+
+
+def test_render_elastic_table_flags_flip():
+    from repro.perf.planner.report import render_elastic_table
+    from repro.perf.planner.search import RestartCosts
+    wide = _fake_pred("fsdp", 8, time_ms=100.0, step_ms=10.0)
+    narrow = _fake_pred("dp", 2, time_ms=120.0, step_ms=12.0)
+    costs = RestartCosts(plan_ms=50.0, compile_ms=2700.0,
+                         restore_ms=250.0)
+    lines = render_elastic_table([wide, narrow], costs, [0.0, 100.0])
+    assert "pick flips" not in lines[2]           # λ=0 row: base pick
+    assert "pick flips" in lines[3]               # λ=100 row: flipped

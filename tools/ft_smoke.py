@@ -1,0 +1,150 @@
+"""CI smoke for the fault-tolerance supervisor: a supervised recovery
+drill with injected transient + fatal failures on the 8-device pool.
+
+  PYTHONPATH=src python tools/ft_smoke.py
+
+Three checks, in order:
+
+  1. **supervised drill** — the train driver runs with two injected
+     transient checkpoint-write faults (``--inject-ckpt-fault 2``), a
+     simulated half-pool failure, and background survivor precompile
+     (``--precompile-survivors``). Asserts the supervisor retried the
+     flaky writes (not crashed, not silently absorbed), recovery used
+     the pre-compiled program with a fast first step, the restore took
+     the shard-to-shard path, and the drill's loss trajectory matches
+     an uninterrupted reference within an ulp-tiered fp32 tolerance.
+  2. **checksum audit** — every checkpoint the drill left behind
+     verifies against its per-entry CRCs.
+  3. **fatal fail-fast** — a checkpoint write failing with a
+     programming error (ValueError) propagates on the *first* attempt;
+     the supervisor must not burn its retry budget on it.
+
+Exit code 0 = all hold; anything else fails CI.
+"""
+import os
+import sys
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_REPO, "src"))
+
+# must run before the jax backend initializes
+from repro.launch.train import DEFAULT_POOL, _force_host_pool  # noqa: E402
+
+_force_host_pool(DEFAULT_POOL)
+
+import json      # noqa: E402
+import shutil    # noqa: E402
+import tempfile  # noqa: E402
+import time      # noqa: E402
+
+import numpy as np  # noqa: E402
+
+STEPS, FAIL = 6, 4
+BASE = ["--arch", "smollm-360m", "--reduced", "--steps", str(STEPS),
+        "--batch", "8", "--seq", "32", "--dtype", "float32",
+        "--strategy", "fsdp", "--log-every", "10"]
+
+
+def _drill(ckpt_dir):
+    from repro.launch.train import main as train_main
+
+    ref = train_main(BASE)
+    drill = train_main(BASE + [
+        "--ckpt-dir", ckpt_dir, "--ckpt-every", "2",
+        "--inject-ckpt-fault", "2", "--max-retries", "4",
+        "--simulate-failure", str(FAIL), "--fail-devices", "4",
+        "--recover-strategy", "tp",
+        "--precompile-survivors", "1", "--precompile-block"])
+
+    sup = drill["supervisor"]
+    assert sup["retries"] == 2, sup            # both faults retried
+    assert sup["precompile"]["compiled"] == [[4]], sup
+    assert not sup["precompile"]["failed"], sup
+
+    rec = drill["recovery"]
+    assert rec is not None, "drill ran without recovering"
+    assert rec["precompiled"] is True, rec
+    assert rec["after"]["strategy"] == drill["strategy"] == "tp", rec
+    assert rec["after"]["devices"] == 4, rec
+    assert rec["restore_mode"] == "shard-to-shard", rec
+    assert rec["restore_s"] > 0, rec
+    # the pre-compiled program makes the first recovered step a plain
+    # step, not a ~2.7 s re-jit — generous bound for loaded CI hosts
+    assert 0 < rec["first_step_s"] < 2.0, rec
+
+    tol = float(256 * np.spacing(np.float32(8.0)))
+    assert len(drill["losses"]) == len(ref["losses"]) == STEPS
+    errs = [abs(a - b) for a, b in zip(drill["losses"], ref["losses"])]
+    assert max(errs) <= tol, {"errs": errs, "tol": tol,
+                              "ref": ref["losses"],
+                              "drill": drill["losses"]}
+    return drill, rec, max(errs), tol
+
+
+def _checksum_audit(ckpt_dir):
+    from repro.train.checkpoint import CheckpointManager
+
+    cm = CheckpointManager(ckpt_dir, keep=3)
+    steps = cm.available_steps()
+    assert steps, "drill left no checkpoints behind"
+    bad = [s for s in steps if not cm.verify(s)]
+    assert not bad, f"checksum verification failed for steps {bad}"
+    return steps
+
+
+def _fatal_fails_fast(ckpt_dir):
+    import jax.numpy as jnp
+
+    from repro.models.layers import Param
+    from repro.train.checkpoint import CheckpointManager
+    from repro.train.supervisor import RetryPolicy, Supervisor
+
+    calls = {"n": 0}
+
+    def fatal_hook(op, step):
+        calls["n"] += 1
+        raise ValueError("injected fatal fault (wrong shape)")
+
+    cm = CheckpointManager(os.path.join(ckpt_dir, "fatal"), keep=2,
+                           fault_hook=fatal_hook)
+    sup = Supervisor(policy=RetryPolicy(max_attempts=4, backoff_s=0.0),
+                     sleep=lambda s: None)
+    state = {"w": Param(jnp.ones((2, 2)), ("a", "b"))}
+
+    def write():
+        cm.save(1, state)
+        cm.wait()
+    try:
+        sup.run("checkpoint_save", write)
+    except ValueError:
+        pass
+    else:
+        raise AssertionError("fatal fault did not propagate")
+    assert calls["n"] == 1, f"fatal fault retried {calls['n']} times"
+    assert sup.retries == 0
+
+
+def main():
+    t0 = time.time()
+    ckpt_dir = tempfile.mkdtemp(prefix="ft_smoke_")
+    try:
+        drill, rec, max_err, tol = _drill(ckpt_dir)
+        steps = _checksum_audit(ckpt_dir)
+        _fatal_fails_fast(ckpt_dir)
+    finally:
+        shutil.rmtree(ckpt_dir, ignore_errors=True)
+
+    print(json.dumps({"ok": True, "pair": "fsdp/8 -> tp/4",
+                      "retries": drill["supervisor"]["retries"],
+                      "precompiled": rec["precompiled"],
+                      "restore_mode": rec["restore_mode"],
+                      "first_step_s": rec["first_step_s"],
+                      "recovery_s": rec["recovery_s"],
+                      "checksummed_steps": steps,
+                      "max_loss_err": max_err, "tol": tol,
+                      "wall_s": round(time.time() - t0, 1)}))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
